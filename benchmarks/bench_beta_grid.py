@@ -1,0 +1,31 @@
+"""Paper Tables 9/10: Beta(a, b) grid ablation for the transition-time
+approximation (reduced grid in quick mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(6)
+    model, params, pipe = common.translation_model()
+    ev = pipe.eval_batches(1)[0]
+    B = 16
+    src = jnp.asarray(ev["src"][:B])
+    ref = ev["x0"][:B]
+    cond = {"prefix_tokens": src}
+    rows = []
+    alphas = (3, 5) if quick else (3, 5, 7)
+    betas = (3, 9, 15) if quick else (3, 5, 7, 9, 11, 13, 15, 17, 19, 21)
+    for a in alphas:
+        for b in betas:
+            eng = common.engine(model, params, method="dndm_topk",
+                                steps=50, beta=(float(a), float(b)))
+            out, wall = eng.generate(key, B, common.SEQ, cond=cond)
+            score = common.mt_bleu(pipe, out.tokens, ref)
+            rows.append(common.row(
+                f"beta_grid/a{a}/b{b}", 1e6 * wall / max(out.nfe, 1),
+                f"bleu={score:.2f} nfe={out.nfe}"))
+    return rows

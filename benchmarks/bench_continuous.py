@@ -1,0 +1,35 @@
+"""Paper Tables 11/12 + App. G.1: discrete vs continuous sampling, and
+continuous *training* followed by continuous sampling."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(7)
+    rows = []
+    # discrete-trained checkpoint
+    model, params, pipe = common.unconditional_model(continuous=False)
+    for m, steps in (("dndm", 50), ("dndm", 1000), ("dndm_c", 0)):
+        eng = common.engine(model, params,
+                            method=m, steps=steps or 50,
+                            beta=(17, 4) if m == "dndm_c" else None)
+        out, wall = eng.generate(key, 8, common.SEQ)
+        ll = common.quality_ll(pipe, out.tokens)
+        label = "inf" if m == "dndm_c" else str(steps)
+        rows.append(common.row(
+            f"continuous/discrete_train/T{label}", 1e6 * wall / out.nfe,
+            f"ppl_proxy={np.exp(-ll):.2f} nfe={out.nfe}"))
+    # continuous-trained checkpoint (App. G.1 Table 12)
+    model_c, params_c, pipe_c = common.unconditional_model(continuous=True)
+    eng = common.engine(model_c, params_c, method="dndm_c", steps=50,
+                        beta=(17, 4))
+    out, wall = eng.generate(key, 8, common.SEQ)
+    ll = common.quality_ll(pipe_c, out.tokens)
+    rows.append(common.row(
+        "continuous/continuous_train/Tinf", 1e6 * wall / out.nfe,
+        f"ppl_proxy={np.exp(-ll):.2f} nfe={out.nfe}"))
+    return rows

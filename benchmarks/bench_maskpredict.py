@@ -1,0 +1,35 @@
+"""Paper Table 13 (App. G.2): Mask-Predict baseline vs DNDM-Absorb at
+matched NFE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(8)
+    model, params, pipe = common.translation_model()
+    ev = pipe.eval_batches(1)[0]
+    B = 16
+    src = jnp.asarray(ev["src"][:B])
+    ref = ev["x0"][:B]
+    cond = {"prefix_tokens": src}
+    rows = []
+    for mp_iters, dndm_steps in ((10, 25), (15, 50)):
+        eng = common.engine(model, params, method="mask_predict",
+                            steps=mp_iters)
+        out, wall = eng.generate(key, B, common.SEQ, cond=cond)
+        rows.append(common.row(
+            f"maskpredict/iters{mp_iters}", 1e6 * wall / out.nfe,
+            f"bleu={common.mt_bleu(pipe, out.tokens, ref):.2f} "
+            f"nfe={out.nfe}"))
+        for m in ("dndm", "dndm_topk"):
+            eng = common.engine(model, params, method=m, steps=dndm_steps)
+            out, wall = eng.generate(key, B, common.SEQ, cond=cond)
+            rows.append(common.row(
+                f"maskpredict/{m}_T{dndm_steps}", 1e6 * wall / out.nfe,
+                f"bleu={common.mt_bleu(pipe, out.tokens, ref):.2f} "
+                f"nfe={out.nfe}"))
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Tables 7/8: average NFE of DNDM vs steps T, against Theorem D.1.
+
+NFE is a pure function of the predetermined transition-time draws, so the
+T=1000 rows cost nothing: we sample tau and count unique values, plus we
+verify with a real sampler run at small T.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import schedules, transition
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    N = common.SEQ
+    batch = 100 if not quick else 32       # paper batches 100
+    for T in (25, 50, 1000):
+        sch = schedules.linear(T)
+        dist = transition.from_schedule(sch)
+        beta = transition.beta_approx(T, 5, 3)
+        for name, d in (("linear", dist), ("beta(5,3)", beta)):
+            tau = transition.sample_transition_times(
+                jax.random.fold_in(key, T), d, batch, N)
+            per_row = np.asarray(transition.nfe_of(tau, T))
+            union = len(np.unique(np.asarray(tau)))
+            want = d.expected_nfe(N)
+            rows.append(common.row(
+                f"nfe/T{T}/{name}/per_row", 0.0,
+                f"avg={per_row.mean():.2f} thmD1={want:.2f}"))
+            rows.append(common.row(
+                f"nfe/T{T}/{name}/batch_union", 0.0,
+                f"nfe={union} vs T={T}"))
+    # sanity: a real sampler run agrees with the counted NFE
+    model, params, pipe = common.unconditional_model()
+    eng = common.engine(model, params, method="dndm", steps=50)
+    out, wall = eng.generate(key, 8, N)
+    rows.append(common.row("nfe/T50/real_run", 1e6 * wall / out.nfe,
+                           f"nfe={out.nfe}"))
+    return rows

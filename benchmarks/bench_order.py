@@ -1,0 +1,30 @@
+"""Paper Table 6 (App. C): transition-order ablation — iid vs
+left-to-right vs right-to-left position-ordered transition times.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(5)
+    model, params, pipe = common.translation_model()
+    ev = pipe.eval_batches(1)[0]
+    B = 16
+    src = jnp.asarray(ev["src"][:B])
+    ref = ev["x0"][:B]
+    cond = {"prefix_tokens": src}
+    rows = []
+    for steps in ((25, 50) if quick else (25, 50, 1000)):
+        for order in ("iid", "l2r", "r2l"):
+            eng = common.engine(model, params, method="dndm_topk",
+                                steps=steps, order=order)
+            out, wall = eng.generate(key, B, common.SEQ, cond=cond)
+            score = common.mt_bleu(pipe, out.tokens, ref)
+            rows.append(common.row(
+                f"order/T{steps}/{order}", 1e6 * wall / max(out.nfe, 1),
+                f"bleu={score:.2f} nfe={out.nfe}"))
+    return rows

@@ -1,0 +1,43 @@
+"""Paper Tables 2/3: conditional generation (synthetic MT) — BLEU + time
+for RDM / RDM-k vs DNDM / DNDM-k across step counts, with the
+continuous-time (infinity) rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(2)
+    model, params, pipe = common.translation_model()
+    ev = pipe.eval_batches(1)[0]
+    B = 16 if quick else 64
+    src = jnp.asarray(ev["src"][:B])
+    ref = ev["x0"][:B]
+    cond = {"prefix_tokens": src}
+    rows = []
+    steps_list = (25, 50) if quick else (25, 50, 1000)
+    methods = ("rdm", "rdm_k", "dndm", "dndm_topk")
+    for steps in steps_list:
+        for m in methods:
+            eng = common.engine(model, params, method=m, steps=steps,
+                                beta=(5, 3) if "dndm" in m else None)
+            out, wall = eng.generate(key, B, common.SEQ, cond=cond)
+            score = common.mt_bleu(pipe, out.tokens, ref)
+            rows.append(common.row(
+                f"quality/T{steps}/{m}", 1e6 * wall / max(out.nfe, 1),
+                f"bleu={score:.2f} nfe={out.nfe} wall_s={wall:.2f}"))
+    # infinity rows (DNDM-C)
+    for m in ("dndm_c", "dndm_c_topk"):
+        eng = common.engine(model, params, method=m, steps=50,
+                            beta=(17, 4))
+        out, wall = eng.generate(key, B, common.SEQ, cond=cond)
+        score = common.mt_bleu(pipe, out.tokens, ref)
+        rows.append(common.row(
+            f"quality/Tinf/{m}", 1e6 * wall / max(out.nfe, 1),
+            f"bleu={score:.2f} nfe={out.nfe} wall_s={wall:.2f}"))
+    return rows

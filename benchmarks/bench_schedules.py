@@ -1,0 +1,39 @@
+"""Paper Table 5 + App. C: transition-time schedule ablation —
+cosine / cosine^2 / linear alpha / Beta for DNDM(-k), BLEU + avg NFE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import schedules, transition
+from repro.serving import EngineConfig, GenerationEngine
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(4)
+    model, params, pipe = common.translation_model()
+    ev = pipe.eval_batches(1)[0]
+    B = 16
+    src = jnp.asarray(ev["src"][:B])
+    ref = ev["x0"][:B]
+    cond = {"prefix_tokens": src}
+    T = 50 if quick else 1000
+    rows = []
+    scheds: dict = {
+        "cosine": None, "cosine_sq": None, "linear": None,
+        "beta(5,3)": (5, 3),
+    }
+    for m in ("dndm", "dndm_topk"):
+        for name, beta in scheds.items():
+            ec = EngineConfig(method=m, steps=T,
+                              schedule=name if beta is None else "linear",
+                              beta=beta)
+            eng = GenerationEngine(model, params, ec)
+            out, wall = eng.generate(key, B, common.SEQ, cond=cond)
+            score = common.mt_bleu(pipe, out.tokens, ref)
+            rows.append(common.row(
+                f"schedule/{m}/{name}", 1e6 * wall / max(out.nfe, 1),
+                f"bleu={score:.2f} nfe={out.nfe}"))
+    return rows

@@ -1,0 +1,32 @@
+"""Paper Fig. 1/4 + the timing columns of Tables 2/3: wall-clock vs
+sampling steps for baselines (linear in T) and DNDM (nearly flat).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(1)
+    model, params, pipe = common.unconditional_model()
+    rows = []
+    B, N = 8, common.SEQ
+    steps_list = (10, 25, 50) if quick else (10, 25, 50, 200, 1000)
+    methods = ("d3pm", "rdm_k", "dndm", "dndm_topk")
+    for steps in steps_list:
+        for m in methods:
+            eng = common.engine(model, params, method=m, steps=steps)
+            out, wall = common.timed_generate(eng, key, B, N, repeats=2)
+            rows.append(common.row(
+                f"speed/T{steps}/{m}", 1e6 * wall / max(out.nfe, 1),
+                f"wall_s={wall:.3f} nfe={out.nfe}"))
+    # DNDM at T=1000 stays cheap even in quick mode (NFE ~ 40)
+    for m in ("dndm", "dndm_topk"):
+        eng = common.engine(model, params, method=m, steps=1000)
+        out, wall = common.timed_generate(eng, key, B, N, repeats=2)
+        rows.append(common.row(
+            f"speed/T1000/{m}", 1e6 * wall / max(out.nfe, 1),
+            f"wall_s={wall:.3f} nfe={out.nfe}"))
+    return rows

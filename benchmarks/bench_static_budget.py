@@ -1,0 +1,41 @@
+"""Beyond-paper: static-quantile DNDM — quality vs fixed NFE budget.
+
+The deployment-grade variant compiles to exactly K network calls; this
+sweep shows quality as K grows toward |T| (the Algorithm 1 limit),
+answering "how few NFEs can a fixed compiled budget afford?".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(9)
+    model, params, pipe = common.translation_model()
+    ev = pipe.eval_batches(1)[0]
+    B = 16
+    cond = {"prefix_tokens": jnp.asarray(ev["src"][:B])}
+    ref = ev["x0"][:B]
+    rows = []
+    budgets = (2, 4, 8, 16, 24) if quick else (2, 4, 8, 12, 16, 24, 32)
+    for K in budgets:
+        for m in ("dndm_static", "dndm_topk_static"):
+            eng = common.engine(model, params, method=m, steps=50,
+                                nfe_budget=K)
+            out, wall = common.timed_generate(eng, key, B, common.SEQ,
+                                              cond=cond, repeats=2)
+            score = common.mt_bleu(pipe, out.tokens, ref)
+            rows.append(common.row(
+                f"static_budget/K{K}/{m}", 1e6 * wall / K,
+                f"bleu={score:.2f} nfe={out.nfe} wall_s={wall:.3f}"))
+    # reference: dynamic Algorithm 1 on the same checkpoint
+    eng = common.engine(model, params, method="dndm_topk", steps=50)
+    out, wall = eng.generate(key, B, common.SEQ, cond=cond)
+    rows.append(common.row(
+        "static_budget/dynamic_ref", 1e6 * wall / max(out.nfe, 1),
+        f"bleu={common.mt_bleu(pipe, out.tokens, ref):.2f} "
+        f"nfe={out.nfe}"))
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Table 4: unconditional text generation — vanilla multinomial
+sampling vs DNDM; perplexity proxy + wall time.
+
+The proxy: generated text is scored by per-token log-likelihood under
+the *true* synthetic Markov chain (exp(-ll) plays GPT-2 perplexity's
+role: lower = better).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+
+
+def run(quick: bool = True) -> list[str]:
+    key = jax.random.PRNGKey(3)
+    models = {kind: common.unconditional_model(noise_kind=kind)
+              for kind in ("multinomial", "absorbing")}
+    rows = []
+    B = 8
+    T = 100 if quick else 1000
+    for m, kind in (("d3pm", "multinomial"), ("dndm", "multinomial"),
+                    ("d3pm", "absorbing"), ("dndm", "absorbing"),
+                    ("dndm_topk", "absorbing")):
+        model, params, pipe = models[kind]
+        eng = common.engine(model, params, method=m, steps=T,
+                            noise_kind=kind)
+        out, wall = eng.generate(key, B, common.SEQ)
+        ll = common.quality_ll(pipe, out.tokens)
+        ppl = float(np.exp(-ll))
+        rows.append(common.row(
+            f"uncond/T{T}/{m}/{kind}", 1e6 * wall / max(out.nfe, 1),
+            f"ppl_proxy={ppl:.2f} nfe={out.nfe} wall_s={wall:.2f}"))
+    return rows

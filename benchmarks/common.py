@@ -1,0 +1,100 @@
+"""Shared benchmark substrate: tiny trained checkpoints (cached on disk),
+quality metrics, and the row/CSV format.
+
+Every benchmark reports rows of (name, us_per_call, derived) where
+``us_per_call`` is microseconds per network function evaluation (or per
+step) and ``derived`` is the benchmark's headline quantity (BLEU, NFE,
+perplexity proxy, roofline seconds, ...).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import noise as noise_lib, schedules
+from repro.data import DataConfig, DataPipeline
+from repro.data.synthetic import bleu
+from repro.models import Model, ModelConfig
+from repro.serving import EngineConfig, GenerationEngine
+from repro.training import AdamW, Trainer, checkpoint, warmup_cosine
+
+VOCAB = 28              # 27 chars + [MASK]
+SEQ = 32
+CKPT_DIR = os.environ.get("REPRO_CKPT_DIR", "results/ckpts")
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
+
+
+def tiny_config(name: str, vocab: int = VOCAB) -> ModelConfig:
+    return ModelConfig(
+        name=name, arch_type="dense", n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=2, d_ff=256, vocab_size=vocab,
+        block_pattern=("attn",) * 2, bidirectional=True)
+
+
+def _train(name: str, task: str, steps: int, continuous: bool = False,
+           noise_kind: str = "absorbing"):
+    # absorbing models reserve a [MASK] id; multinomial models use the
+    # bare 27-char vocab (paper: multinomial diffusion has no mask).
+    vocab = VOCAB if noise_kind == "absorbing" else VOCAB - 1
+    cfg = tiny_config(name, vocab)
+    model = Model(cfg)
+    sch = schedules.linear(50)
+    nz = noise_lib.get(noise_kind, vocab)
+    # MT benchmarks use the word-reversal variant: hard enough that the
+    # tiny model stays imperfect and sampler quality differences show
+    pipe = DataPipeline(DataConfig(task=task, vocab=27, seq_len=SEQ,
+                                   batch=32, mt_reverse=True))
+    path = os.path.join(CKPT_DIR, name)
+    if os.path.exists(path + ".npz"):
+        params = jax.tree.map(jnp.asarray, checkpoint.load(path))
+        return model, params, pipe
+    opt = AdamW(schedule=warmup_cosine(3e-3, 20, steps))
+    trainer = Trainer(model, sch, nz, opt, continuous_time=continuous,
+                      ckpt_path=path)
+    state, _ = trainer.run(iter(pipe), steps=steps, verbose=False)
+    return model, state["params"], pipe
+
+
+def unconditional_model(continuous: bool = False,
+                        noise_kind: str = "absorbing"):
+    steps = 200 if QUICK else 600
+    tag = f"uncond_{noise_kind[:5]}" + ("_c" if continuous else "")
+    return _train(tag, "unconditional", steps, continuous, noise_kind)
+
+
+def translation_model():
+    steps = 400 if QUICK else 2000
+    return _train("mt", "translation", steps)
+
+
+def engine(model, params, **kw) -> GenerationEngine:
+    return GenerationEngine(model, params, EngineConfig(**kw))
+
+
+def quality_ll(pipe, tokens) -> float:
+    """Per-token log-likelihood under the true Markov chain (higher =
+    better; perplexity proxy = exp(-ll))."""
+    return float(pipe.lang.log_likelihood(np.asarray(tokens)))
+
+
+def mt_bleu(pipe, hyp, ref) -> float:
+    return bleu(np.asarray(hyp), np.asarray(ref))
+
+
+def timed_generate(eng, key, batch, N, cond=None, repeats: int = 1):
+    outs = []
+    walls = []
+    for r in range(repeats):
+        out, wall = eng.generate(jax.random.fold_in(key, r), batch, N,
+                                 cond=cond)
+        outs.append(out)
+        walls.append(wall)
+    return outs[-1], float(np.min(walls))
+
+
+def row(name: str, us_per_call: float, derived) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

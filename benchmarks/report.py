@@ -1,0 +1,87 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+results/dryrun/*.json and results/perf/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/sections.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _fmt(v, w=10):
+    return f"{v:>{w}.3e}" if isinstance(v, float) else f"{v:>{w}}"
+
+
+def dryrun_table(out_dir="results/dryrun") -> str:
+    lines = ["| arch | shape | mesh | params (tot/act) | arg GB | temp GB "
+             "| coll GB | #coll |",
+             "|---|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(p))
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"ERROR {r.get('error','')[:60]} | | | | |")
+            continue
+        m = r["memory"]
+        cb = sum(v for k, v in r["collectives"].items() if k != "count")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['params_total']/1e9:.2f}B/{r['params_active']/1e9:.2f}B | "
+            f"{m['argument_bytes']/1e9:.2f} | {m['temp_bytes']/1e9:.1f} | "
+            f"{cb/1e9:.2f} | {r['collectives']['count']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(out_dir="results/dryrun", mesh="single_pod") -> str:
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | MODEL_FLOPS | useful | corr_flops |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        r = json.load(open(p))
+        if r.get("status") != "ok":
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+            f"**{rf['dominant']}** | {rf['model_flops']:.3e} | "
+            f"{rf['useful_ratio']:.3f} | "
+            f"{rf['scan_correction_flops']:.2e} |")
+    return "\n".join(lines)
+
+
+def perf_table(out_dir="results/perf") -> str:
+    lines = ["| pair | iteration | compute_s | memory_s | collective_s | "
+             "dominant | useful |",
+             "|---|---|---|---|---|---|---|"]
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(p))
+        name = os.path.basename(p)[:-5]
+        if r.get("status") != "ok":
+            lines.append(f"| {name} | | ERROR {r.get('error','')[:80]} "
+                         f"| | | | |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['arch']} x {r['shape']} | {r.get('tag','')} | "
+            f"{rf['compute_s']:.3e} | {rf['memory_s']:.3e} | "
+            f"{rf['collective_s']:.3e} | {rf['dominant']} | "
+            f"{rf['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run artifact table\n")
+    print(dryrun_table())
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(mesh="single_pod"))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(mesh="multi_pod"))
+    print("\n## Perf iterations\n")
+    print(perf_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Set REPRO_BENCH_QUICK=0
+for the full (slow) grids; default quick mode finishes on a laptop CPU.
+
+  bench_nfe           -> Tables 7/8  (avg NFE vs T, Theorem D.1)
+  bench_speed         -> Fig. 1/4    (wall-clock scaling in steps)
+  bench_quality       -> Tables 2/3  (BLEU + time, conditional MT)
+  bench_unconditional -> Table 4     (unconditional text, ppl proxy)
+  bench_schedules     -> Table 5     (transition-time schedule ablation)
+  bench_order         -> Table 6     (l2r / r2l transition order)
+  bench_beta_grid     -> Tables 9/10 (Beta(a,b) grid)
+  bench_continuous    -> Tables 11/12 (continuous train/sample)
+  bench_maskpredict   -> Table 13    (Mask-Predict comparison)
+  roofline            -> EXPERIMENTS §Roofline (from dry-run artifacts)
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
+
+MODULES = [
+    "bench_nfe", "bench_speed", "bench_quality", "bench_unconditional",
+    "bench_schedules", "bench_order", "bench_beta_grid",
+    "bench_continuous", "bench_maskpredict", "bench_static_budget",
+    "bench_ddim",
+    "roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run(quick=QUICK)
+            for r in rows:
+                print(r, flush=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

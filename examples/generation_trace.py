@@ -1,0 +1,66 @@
+"""Paper Figure 2: visualize the DNDM reverse process — the text at
+successive transition times and the quality trajectory.
+
+    PYTHONPATH=src python examples/generation_trace.py --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import noise, schedules, transition
+from repro.core.samplers import SamplerConfig, dndm
+from repro.data import CharTokenizer, DataConfig, DataPipeline
+from repro.models import Model, ModelConfig
+from repro.training import AdamW, Trainer, warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--train-steps", type=int, default=250)
+    ap.add_argument("--seq", type=int, default=48)
+    args = ap.parse_args()
+
+    vocab = 28
+    cfg = ModelConfig(name="trace", arch_type="dense", n_layers=2,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=vocab, block_pattern=("attn",) * 2,
+                      bidirectional=True)
+    model = Model(cfg)
+    sch = schedules.linear(args.steps)
+    nz = noise.absorbing(vocab)
+    pipe = DataPipeline(DataConfig(task="unconditional", vocab=27,
+                                   seq_len=args.seq, batch=32))
+    trainer = Trainer(model, sch, nz,
+                      AdamW(schedule=warmup_cosine(3e-3, 20,
+                                                   args.train_steps)))
+    state, _ = trainer.run(iter(pipe), steps=args.train_steps,
+                           verbose=False)
+
+    dist = transition.beta_approx(args.steps, 15, 7)
+    out = dndm.sample(
+        jax.random.PRNGKey(0), model.denoise_fn(state["params"]), nz,
+        dist, 1, args.seq, cfg=SamplerConfig(trace=True))
+    tok = CharTokenizer()
+    print(f"DNDM reverse process, T={args.steps}, NFE={out.nfe} "
+          f"(one line per network call; '_' = [MASK]):\n")
+    times = out.aux["times"]
+    shown = 0
+    for t, state_t in zip(times, out.aux["trace"]):
+        row = state_t[0]
+        text = "".join("_" if c == nz.mask_id else tok.alphabet[c]
+                       for c in row)
+        ll = pipe.lang.log_likelihood(
+            np.where(row == nz.mask_id, 0, row))
+        if shown % max(1, out.nfe // 12) == 0 or t == times[-1]:
+            print(f"  t={t:4d}  ll/tok={ll:7.2f}  {text!r}")
+        shown += 1
+    print("\n(the majority of transitions cluster near the end of the "
+          "reverse pass — the Beta(15,7) law from the paper's Fig. 2)")
+
+
+if __name__ == "__main__":
+    main()

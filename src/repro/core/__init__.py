@@ -1,0 +1,16 @@
+"""Core discrete-diffusion library: the paper's contribution in JAX.
+
+Modules:
+  schedules   — alpha schedules (discrete + continuous limits)
+  noise       — multinomial / absorbing q_noise
+  forward     — Markov (eq. 1) and non-Markov (eq. 6) corruption
+  transition  — transition-time laws, Beta approximation, Thm 3.6/D.1
+  posterior   — q(x_{t-1}|x_t, x0) for the D3PM baselines
+  losses      — reparameterized CE + ELBO training objectives
+  samplers    — DNDM (Alg 1/2/3/4) + D3PM / RDM / Mask-Predict baselines
+"""
+from repro.core import (forward, losses, noise, posterior, samplers,
+                        schedules, transition)
+
+__all__ = ["forward", "losses", "noise", "posterior", "samplers",
+           "schedules", "transition"]

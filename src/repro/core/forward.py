@@ -1,0 +1,103 @@
+"""Forward (corruption) processes.
+
+Two mathematically distinct trajectory laws with identical marginals
+(paper Thm 3.1):
+
+  * ``markov_trajectory``     — eq. (1):  x_t = b_t x_{t-1} + (1-b_t) w_t
+  * ``non_markov_trajectory`` — eq. (6):  x_t = b_t x_{t-1} + (1-b_t) w
+                                (one shared noise draw per token)
+
+plus the closed-form marginal sampler ``sample_xt`` used for training
+(eq. 3): x_t = x_0 w.p. alpha_t else ~ q_noise.
+
+All functions operate on integer token ids of shape (..., N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.noise import NoiseDist
+from repro.core.schedules import Schedule
+
+Array = jnp.ndarray
+
+
+def sample_xt(key: jax.Array, x0: Array, alpha_t: Array,
+              noise: NoiseDist) -> Array:
+    """Sample x_t ~ q(x_t | x_0) = Cat(alpha_t x_0 + (1-alpha_t) q_noise).
+
+    ``alpha_t`` broadcasts against ``x0`` (scalar, per-batch, or per-token).
+    """
+    k_keep, k_noise = jax.random.split(key)
+    keep = jax.random.bernoulli(k_keep, jnp.broadcast_to(alpha_t, x0.shape))
+    w = noise.sample(k_noise, x0.shape)
+    return jnp.where(keep, x0, w)
+
+
+def non_markov_trajectory(key: jax.Array, x0: Array, schedule: Schedule,
+                          noise: NoiseDist) -> Array:
+    """Full DNDM trajectory {x_t}_{t=0..T} via eq. (6).
+
+    Implemented through the transition-time characterization (eq. 7):
+    sample tau per token, then x_t = x0 if t < tau else w, with a single
+    shared w per token.  Returns (T+1, ...) stacked trajectory.
+    """
+    k_tau, k_w = jax.random.split(key)
+    probs = jnp.asarray(schedule.transition_probs())
+    # tau in {1..T}
+    tau = 1 + jax.random.categorical(
+        k_tau, jnp.log(probs + 1e-30), shape=x0.shape)
+    w = noise.sample(k_w, x0.shape)
+    ts = jnp.arange(schedule.T + 1).reshape((-1,) + (1,) * x0.ndim)
+    return jnp.where(ts < tau[None], x0[None], w[None])
+
+
+def markov_trajectory(key: jax.Array, x0: Array, schedule: Schedule,
+                      noise: NoiseDist) -> Array:
+    """Full D3PM trajectory {x_t}_{t=0..T} via eq. (1) (fresh w_t each step)."""
+    betas = jnp.asarray(schedule.betas)
+
+    def step(x_prev, inp):
+        beta_t, k = inp
+        kb, kw = jax.random.split(k)
+        b = jax.random.bernoulli(kb, jnp.broadcast_to(beta_t, x_prev.shape))
+        w = noise.sample(kw, x_prev.shape)
+        x_t = jnp.where(b, x_prev, w)
+        return x_t, x_t
+
+    keys = jax.random.split(key, schedule.T)
+    _, traj = jax.lax.scan(step, x0, (betas, keys))
+    return jnp.concatenate([x0[None], traj], axis=0)
+
+
+def corrupt_for_training(key: jax.Array, x0: Array, schedule: Schedule,
+                         noise: NoiseDist,
+                         t: Array | None = None) -> tuple[Array, Array, Array]:
+    """Training-time corruption: sample t ~ Unif{1..T} (or use given t),
+    then x_t ~ q(x_t|x_0).  Returns (x_t, t, alpha_t).
+
+    ``t`` has shape x0.shape[:1] (one timestep per example, as in RDM).
+    """
+    k_t, k_x = jax.random.split(key)
+    B = x0.shape[0]
+    if t is None:
+        t = jax.random.randint(k_t, (B,), 1, schedule.T + 1)
+    alphas = jnp.asarray(schedule.alphas, dtype=jnp.float32)
+    alpha_t = alphas[t]
+    bshape = (B,) + (1,) * (x0.ndim - 1)
+    x_t = sample_xt(k_x, x0, alpha_t.reshape(bshape), noise)
+    return x_t, t, alpha_t
+
+
+def corrupt_continuous(key: jax.Array, x0: Array, schedule: Schedule,
+                       noise: NoiseDist) -> tuple[Array, Array, Array]:
+    """Continuous-time corruption for DNDM-C style training (§3.3, App G.1):
+    t ~ Unif[0, 1], x_t = x0 w.p. alpha(t).  Returns (x_t, t, alpha_t)."""
+    k_t, k_x = jax.random.split(key)
+    B = x0.shape[0]
+    t = jax.random.uniform(k_t, (B,))
+    alpha_t = schedule.alpha_fn(t)
+    bshape = (B,) + (1,) * (x0.ndim - 1)
+    x_t = sample_xt(k_x, x0, alpha_t.reshape(bshape), noise)
+    return x_t, t, alpha_t

@@ -1,0 +1,74 @@
+"""Noise distributions ``q_noise`` for discrete diffusion.
+
+The paper covers the two most widely used D3PMs:
+  * multinomial diffusion — ``q_noise`` uniform over the vocabulary
+    (Hoogeboom et al. 2021b);
+  * absorbing diffusion — ``q_noise`` is a point mass on a [MASK] token
+    (Austin et al. 2021).
+
+Both are represented by a small object that can sample noise tokens and give
+the noise probability vector.  Tokens are integer ids (the one-hot formalism
+of the paper is kept in the math, ids in the code).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseDist:
+    """A categorical noise distribution over ``vocab_size`` tokens."""
+
+    kind: str            # "multinomial" | "absorbing"
+    vocab_size: int      # includes the mask token for absorbing diffusion
+    mask_id: int = -1    # only used by absorbing
+
+    def sample(self, key: jax.Array, shape: tuple[int, ...]) -> Array:
+        """Draw noise token ids ``w ~ q_noise``."""
+        if self.kind == "multinomial":
+            return jax.random.randint(key, shape, 0, self.vocab_size)
+        return jnp.full(shape, self.mask_id, dtype=jnp.int32)
+
+    def probs(self, dtype=jnp.float32) -> Array:
+        """The row vector ``q_noise`` over the vocabulary."""
+        if self.kind == "multinomial":
+            return jnp.full((self.vocab_size,), 1.0 / self.vocab_size, dtype)
+        return jax.nn.one_hot(self.mask_id, self.vocab_size, dtype=dtype)
+
+    def logit_mask(self, dtype=jnp.float32) -> Array:
+        """Additive mask that forbids predicting the noise-only token.
+
+        For absorbing diffusion the network must never predict [MASK] as a
+        clean token; multinomial has no reserved ids.
+        """
+        if self.kind == "absorbing":
+            return jnp.where(
+                jnp.arange(self.vocab_size) == self.mask_id,
+                jnp.asarray(-1e9, dtype), jnp.asarray(0.0, dtype))
+        return jnp.zeros((self.vocab_size,), dtype)
+
+
+def multinomial(vocab_size: int) -> NoiseDist:
+    return NoiseDist(kind="multinomial", vocab_size=vocab_size)
+
+
+def absorbing(vocab_size: int, mask_id: int | None = None) -> NoiseDist:
+    """Absorbing noise; by convention [MASK] is the last id unless given."""
+    if mask_id is None:
+        mask_id = vocab_size - 1
+    if not 0 <= mask_id < vocab_size:
+        raise ValueError(f"mask_id {mask_id} outside vocab {vocab_size}")
+    return NoiseDist(kind="absorbing", vocab_size=vocab_size, mask_id=mask_id)
+
+
+def get(kind: str, vocab_size: int, mask_id: int | None = None) -> NoiseDist:
+    if kind == "multinomial":
+        return multinomial(vocab_size)
+    if kind == "absorbing":
+        return absorbing(vocab_size, mask_id)
+    raise KeyError(f"unknown noise kind {kind!r}")

@@ -1,0 +1,63 @@
+"""Reverse-process posteriors q(x_{t-1} | x_t, x0) for D3PM baselines.
+
+Multinomial (uniform noise), Hoogeboom et al. 2021b eq. (15) form:
+    theta_post(x_t, x0) ∝ (beta_t x_t + (1-beta_t)/K 1)
+                        ⊙ (alpha_{t-1} x0 + (1-alpha_{t-1})/K 1)
+with the network's predicted distribution substituted for the one-hot x0.
+
+Absorbing (Austin et al. 2021, see paper App. B.1):
+    if x_t = [MASK]: x_{t-1} = [MASK] w.p. (1-alpha_{t-1})/(1-alpha_t)
+                     x_{t-1} = x0     w.p. (alpha_{t-1}-alpha_t)/(1-alpha_t)
+    else:            x_{t-1} = x_t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.noise import NoiseDist
+
+Array = jnp.ndarray
+
+
+def multinomial_posterior(x_t: Array, x0_probs: Array, alpha_tm1: Array,
+                          alpha_t: Array, vocab_size: int) -> Array:
+    """theta_post over x_{t-1}.  x_t: (..., N) ids; x0_probs: (..., N, K).
+
+    alpha_* broadcast against x_t (scalars or (...,1) shaped).
+    Returns (..., N, K) normalized probabilities.
+    """
+    K = vocab_size
+    beta_t = alpha_t / jnp.maximum(alpha_tm1, 1e-12)
+    xt_onehot = jax.nn.one_hot(x_t, K, dtype=x0_probs.dtype)
+    a = beta_t[..., None] * xt_onehot + (1.0 - beta_t)[..., None] / K
+    b = alpha_tm1[..., None] * x0_probs + (1.0 - alpha_tm1)[..., None] / K
+    p = a * b
+    return p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+
+
+def absorbing_posterior(x_t: Array, x0_probs: Array, alpha_tm1: Array,
+                        alpha_t: Array, noise: NoiseDist) -> Array:
+    """Posterior over x_{t-1} for absorbing diffusion.  Shapes as above."""
+    K = noise.vocab_size
+    mask_id = noise.mask_id
+    denom = jnp.maximum(1.0 - alpha_t, 1e-12)
+    p_stay = ((1.0 - alpha_tm1) / denom)[..., None]     # stay masked
+    p_reveal = ((alpha_tm1 - alpha_t) / denom)[..., None]  # reveal as x0
+    mask_onehot = jax.nn.one_hot(
+        jnp.full(x_t.shape, mask_id), K, dtype=x0_probs.dtype)
+    # forbid the network from revealing [MASK] itself
+    x0p = x0_probs * (1.0 - mask_onehot)
+    x0p = x0p / jnp.maximum(x0p.sum(-1, keepdims=True), 1e-30)
+    masked_branch = p_stay * mask_onehot + p_reveal * x0p
+    clean_branch = jax.nn.one_hot(x_t, K, dtype=x0_probs.dtype)
+    is_masked = (x_t == mask_id)[..., None]
+    return jnp.where(is_masked, masked_branch, clean_branch)
+
+
+def posterior(x_t: Array, x0_probs: Array, alpha_tm1: Array, alpha_t: Array,
+              noise: NoiseDist) -> Array:
+    if noise.kind == "multinomial":
+        return multinomial_posterior(x_t, x0_probs, alpha_tm1, alpha_t,
+                                     noise.vocab_size)
+    return absorbing_posterior(x_t, x0_probs, alpha_tm1, alpha_t, noise)

@@ -1,0 +1,11 @@
+"""Reverse-process samplers: DNDM family + baselines."""
+from repro.core.samplers import (d3pm, ddim, dndm, dndm_continuous,
+                                 dndm_topk, mask_predict, rdm)
+from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
+                                      init_noise_tokens, select_x0)
+
+__all__ = [
+    "d3pm", "ddim", "dndm", "dndm_continuous", "dndm_topk", "mask_predict", "rdm",
+    "DenoiseFn", "SamplerConfig", "SamplerOutput", "init_noise_tokens",
+    "select_x0",
+]

@@ -1,0 +1,61 @@
+"""Sampler API shared by every reverse-process algorithm.
+
+A *denoiser* is any callable ``denoise_fn(x_t, t_norm, cond) -> logits``:
+  x_t    : (B, N) int32 current tokens
+  t_norm : (B,) float32 time in [0, 1] (t/T for discrete samplers)
+  cond   : optional dict of conditioning tensors (e.g. encoder output)
+  logits : (B, N, K)
+
+Samplers are model-agnostic: the model zoo, the oracle test denoisers and
+the tiny trained checkpoints all expose this signature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.noise import NoiseDist
+
+Array = jnp.ndarray
+DenoiseFn = Callable[[Array, Array, Any], Array]
+
+
+class SamplerOutput(NamedTuple):
+    tokens: Array          # (B, N) final x_0
+    nfe: int               # network calls actually made for this batch
+    aux: dict              # trace / diagnostics
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Common knobs (paper §3.2, App. E/F)."""
+
+    x0_mode: str = "sample"        # "sample" | "argmax"
+    temperature: float = 1.0
+    trace: bool = False            # record intermediate states
+
+
+def select_x0(key: jax.Array, logits: Array, noise: NoiseDist,
+              cfg: SamplerConfig) -> tuple[Array, Array]:
+    """Pick x0_hat from logits; returns (tokens (B,N), scores (B,N)).
+
+    Scores are the per-token log-probabilities of the chosen token —
+    exactly the quantity RDM-k / DNDM-k rank on (paper App. E).
+    """
+    logits = logits + noise.logit_mask(logits.dtype)
+    logp = jax.nn.log_softmax(logits / cfg.temperature, axis=-1)
+    if cfg.x0_mode == "argmax":
+        tok = logp.argmax(-1)
+    else:
+        tok = jax.random.categorical(key, logp, axis=-1)
+    score = jnp.take_along_axis(logp, tok[..., None], axis=-1)[..., 0]
+    return tok.astype(jnp.int32), score
+
+
+def init_noise_tokens(key: jax.Array, noise: NoiseDist, batch: int,
+                      N: int) -> Array:
+    """x_T ~ q_noise for every token."""
+    return noise.sample(key, (batch, N)).astype(jnp.int32)

@@ -1,0 +1,42 @@
+"""D3PM ancestral sampling — the Markov baseline (paper §2, App. B.1).
+
+One network call per step: NFE = T.  Supports multinomial and absorbing
+noise through the shared posterior module.  Fully jittable (lax.scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.noise import NoiseDist
+from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
+                                      init_noise_tokens)
+from repro.core.posterior import posterior
+from repro.core.schedules import Schedule
+
+Array = jnp.ndarray
+
+
+def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
+           schedule: Schedule, batch: int, N: int,
+           cond=None, cfg: SamplerConfig = SamplerConfig()) -> SamplerOutput:
+    T = schedule.T
+    alphas = jnp.asarray(schedule.alphas, jnp.float32)
+    k_x, k_loop = jax.random.split(key)
+    x = init_noise_tokens(k_x, noise, batch, N)
+
+    def step(x, inp):
+        t, k = inp                                   # t: scalar int
+        t_norm = jnp.full((batch,), t / T, jnp.float32)
+        logits = denoise_fn(x, t_norm, cond) + noise.logit_mask()
+        x0_probs = jax.nn.softmax(logits / cfg.temperature, axis=-1)
+        a_tm1 = jnp.full((batch, 1), alphas[t - 1])
+        a_t = jnp.full((batch, 1), alphas[t])
+        p = posterior(x, x0_probs, a_tm1, a_t, noise)
+        x = jax.random.categorical(k, jnp.log(p + 1e-30), axis=-1)
+        return x.astype(jnp.int32), None
+
+    ts = jnp.arange(T, 0, -1)
+    keys = jax.random.split(k_loop, T)
+    x, _ = jax.lax.scan(step, x, (ts, keys))
+    return SamplerOutput(tokens=x, nfe=T, aux={})

@@ -1,0 +1,112 @@
+"""DNDM-K — top-k transition time (paper Algorithm 4, App. E).
+
+Instead of revealing the *specific* tokens whose tau equals t, DNDM-K only
+uses the transition times to decide *how many* tokens should be revealed by
+step t (``K_t = sum_n 1(tau_n >= t)``), and picks *which* tokens by the
+network's own confidence scores (log-prob of the decoded token), never
+re-updating an already-revealed token.  Function evaluations happen only
+when ``K_{t-1} > K_t`` — the same skip set as Algorithm 1, so the NFE is
+identical while quality improves by 1-2 BLEU in the paper.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.noise import NoiseDist
+from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
+                                      init_noise_tokens, select_x0)
+from repro.core.transition import TransitionDist, sample_transition_times
+
+Array = jnp.ndarray
+
+
+def _reveal_topk(x: Array, x0_hat: Array, score: Array, revealed: Array,
+                 k_target: Array) -> tuple[Array, Array]:
+    """Reveal enough top-score tokens to reach k_target revealed per row.
+
+    Already-revealed tokens are pinned with +inf so the top-``k_target``
+    set always contains them (Algorithm 4's set U); their values are kept.
+    """
+    s = jnp.where(revealed, jnp.inf, score)
+    # rank within row: position of each token when sorted by descending s
+    order = jnp.argsort(-s, axis=-1)
+    ranks = jnp.argsort(order, axis=-1)
+    in_top = ranks < k_target[:, None]
+    newly = in_top & ~revealed
+    x = jnp.where(newly, x0_hat, x)
+    return x, revealed | newly
+
+
+@partial(jax.jit, static_argnames=("denoise_fn", "noise", "cfg", "T"))
+def _step(x, revealed, t, k_target, k, cond, *, denoise_fn, noise, cfg, T):
+    t_norm = jnp.full((x.shape[0],), t / T, jnp.float32)
+    logits = denoise_fn(x, t_norm, cond)
+    x0_hat, score = select_x0(k, logits, noise, cfg)
+    return _reveal_topk(x, x0_hat, score, revealed, k_target)
+
+
+def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
+           dist: TransitionDist, batch: int, N: int,
+           cond=None, cfg: SamplerConfig = SamplerConfig(),
+           order: str = "iid", shared_tau: bool = True) -> SamplerOutput:
+    """Algorithm 4 — host-driven, NFE = |T| as in Algorithm 1."""
+    T = dist.T
+    k_tau, k_x, k_loop = jax.random.split(key, 3)
+    tau = sample_transition_times(k_tau, dist, batch, N, order=order,
+                                  shared=shared_tau)
+    x = init_noise_tokens(k_x, noise, batch, N)
+    revealed = jnp.zeros((batch, N), bool)
+
+    tau_np = np.asarray(jax.device_get(tau))
+    times = np.unique(tau_np)[::-1]                      # descending
+    keys = jax.random.split(k_loop, len(times))
+    for i, t in enumerate(times):
+        # K_{t-1} = #{n : tau_n >= t} — tokens that must be revealed once
+        # the reverse process has passed step t (computed on device).
+        k_target = jnp.sum(tau >= int(t), axis=-1)
+        x, revealed = _step(x, revealed, jnp.asarray(t, jnp.float32),
+                            k_target, keys[i], cond, denoise_fn=denoise_fn,
+                            noise=noise, cfg=cfg, T=T)
+    return SamplerOutput(tokens=x, nfe=len(times),
+                         aux={"tau": tau, "times": times})
+
+
+def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
+                  dist: TransitionDist, batch: int, N: int,
+                  nfe_budget: int, cond=None,
+                  cfg: SamplerConfig = SamplerConfig(),
+                  order: str = "iid", shared_tau: bool = True) -> SamplerOutput:
+    """Beyond-paper jitted DNDM-K: reveal-count schedule on the quantile
+    grid, one compiled ``lax.scan`` with fixed NFE."""
+    from repro.core.samplers.dndm import quantile_grid
+    T = dist.T
+    grid = jnp.asarray(quantile_grid(dist, nfe_budget))
+
+    k_tau, k_x, k_loop = jax.random.split(key, 3)
+    tau = sample_transition_times(k_tau, dist, batch, N, order=order,
+                                  shared=shared_tau)
+    # bucketize up to the grid so the last scanned time covers every token
+    idx = jnp.clip(jnp.searchsorted(grid, tau), 0, nfe_budget - 1)
+    tau_b = grid[idx]
+    x = init_noise_tokens(k_x, noise, batch, N)
+    revealed = jnp.zeros((batch, N), bool)
+
+    def step(carry, inp):
+        x, revealed = carry
+        t, k = inp
+        k_target = jnp.sum(tau_b >= t.astype(tau_b.dtype), axis=-1)
+        t_norm = jnp.full((batch,), t / T, jnp.float32)
+        logits = denoise_fn(x, t_norm, cond)
+        x0_hat, score = select_x0(k, logits, noise, cfg)
+        x, revealed = _reveal_topk(x, x0_hat, score, revealed, k_target)
+        return (x, revealed), None
+
+    keys = jax.random.split(k_loop, nfe_budget)
+    ts = grid[::-1].astype(jnp.float32)
+    (x, revealed), _ = jax.lax.scan(step, (x, revealed), (ts, keys))
+    # final sweep guarantee: any token still unrevealed gets the last pred
+    return SamplerOutput(tokens=x, nfe=nfe_budget, aux={"tau": tau})

@@ -1,0 +1,45 @@
+"""Mask-Predict baseline (Ghazvininejad et al. 2019; paper App. G.2).
+
+Iterative refinement with a fixed iteration budget M: start all-[MASK],
+predict every position each round, keep the most confident tokens and
+re-mask the rest on a linear-decay schedule n_i = N * (M - i) / M.
+NFE = M.  Absorbing-vocabulary models only (needs a [MASK] id).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.noise import NoiseDist
+from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
+                                      select_x0)
+
+Array = jnp.ndarray
+
+
+def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
+           iterations: int, batch: int, N: int,
+           cond=None, cfg: SamplerConfig = SamplerConfig()) -> SamplerOutput:
+    if noise.kind != "absorbing":
+        raise ValueError("Mask-Predict needs an absorbing ([MASK]) vocab")
+    mask_id = noise.mask_id
+    x = jnp.full((batch, N), mask_id, jnp.int32)
+    M = iterations
+
+    def step(carry, inp):
+        x, _ = carry
+        i, k = inp
+        t_norm = jnp.full((batch,), (M - i) / M, jnp.float32)
+        logits = denoise_fn(x, t_norm, cond)
+        x0_hat, score = select_x0(k, logits, noise, cfg)
+        n_mask = jnp.round(N * (M - 1 - i) / M).astype(jnp.int32)  # to re-mask
+        order = jnp.argsort(score, axis=-1)          # ascending confidence
+        ranks = jnp.argsort(order, axis=-1)
+        remask = ranks < n_mask
+        x = jnp.where(remask, mask_id, x0_hat)
+        return (x.astype(jnp.int32), score), None
+
+    keys = jax.random.split(key, M)
+    (x, _), _ = jax.lax.scan(step, (x, jnp.zeros((batch, N))),
+                             (jnp.arange(M), keys))
+    return SamplerOutput(tokens=x, nfe=M, aux={})

@@ -1,0 +1,64 @@
+"""RDM / RDM-k sampling (Zheng et al. 2023) — the paper's main baseline.
+
+Reparameterized reverse sampling: at every step the network is called
+(NFE = T), a fresh x0_hat is decoded, and the set of "denoised" tokens is
+grown so that the clean fraction tracks alpha_{t-1}:
+
+  * RDM   — the newly denoised tokens are chosen uniformly at random
+            among the still-noisy ones (the b_t routing variable);
+  * RDM-k — they are the still-noisy tokens with the highest decoding
+            scores (the discriminative top-k trick, App. E).
+
+Denoised tokens keep their committed value; noisy tokens are re-noised
+(multinomial) or stay [MASK] (absorbing).  Fully jittable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.noise import NoiseDist
+from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
+                                      init_noise_tokens, select_x0)
+from repro.core.schedules import Schedule
+
+Array = jnp.ndarray
+
+
+def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
+           schedule: Schedule, batch: int, N: int,
+           cond=None, cfg: SamplerConfig = SamplerConfig(),
+           topk: bool = True) -> SamplerOutput:
+    T = schedule.T
+    alphas = jnp.asarray(schedule.alphas, jnp.float32)
+    k_x, k_loop = jax.random.split(key)
+    x = init_noise_tokens(k_x, noise, batch, N)
+    denoised = jnp.zeros((batch, N), bool)
+
+    def step(carry, inp):
+        x, denoised = carry
+        t, k = inp
+        k_sel, k_route = jax.random.split(k)
+        t_norm = jnp.full((batch,), t / T, jnp.float32)
+        logits = denoise_fn(x, t_norm, cond)
+        x0_hat, score = select_x0(k_sel, logits, noise, cfg)
+        # target number of clean tokens after this step: N * (1 - ?) —
+        # clean fraction at time t-1 is alpha_{t-1} (forward marginal).
+        k_target = jnp.round(N * alphas[t - 1]).astype(jnp.int32)
+        k_target = jnp.maximum(k_target, denoised.sum(-1))  # never shrink
+        if topk:
+            s = jnp.where(denoised, jnp.inf, score)
+        else:
+            s = jnp.where(denoised, jnp.inf,
+                          jax.random.uniform(k_route, score.shape))
+        order = jnp.argsort(-s, axis=-1)
+        ranks = jnp.argsort(order, axis=-1)
+        in_top = ranks < k_target[..., None]
+        newly = in_top & ~denoised
+        x = jnp.where(newly, x0_hat, x)
+        return (x, denoised | newly), None
+
+    ts = jnp.arange(T, 0, -1)
+    keys = jax.random.split(k_loop, T)
+    (x, denoised), _ = jax.lax.scan(step, (x, denoised), (ts, keys))
+    return SamplerOutput(tokens=x, nfe=T, aux={})

@@ -1,0 +1,168 @@
+"""Transition-time machinery — the heart of DNDM.
+
+Definition 3.2: ``tau = min{t : b_t = 0}`` — the (single) step at which a
+token flips from clean to noise.  Theorem 3.6: ``P(tau = t) =
+alpha_{t-1} - alpha_t``; tokens are independent.  Sampling the whole set
+``T = {tau_n}`` *upfront* de-randomizes the reverse process and the NFE is
+``|T|`` (unique values), with ``E|T| = (1 - C) T`` (Theorem D.1).
+
+Also implements the practical Beta(a, b) approximation of the transition law
+(paper §3.2 / App. C and F) and the position-ordered variants of App. C
+Table 6 (left-to-right / right-to-left).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedules import Schedule
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TransitionDist:
+    """Distribution D_tau over {1..T} (discrete) or (0,1] (continuous)."""
+
+    name: str
+    T: int                      # 0 => continuous time
+    probs: np.ndarray | None    # (T,) for discrete; None for continuous
+    beta_params: tuple[float, float] | None = None  # for beta-based laws
+
+    # ---------------- discrete sampling ----------------
+    def sample(self, key: jax.Array, shape: tuple[int, ...]) -> Array:
+        """Sample integer transition times in {1..T}."""
+        if self.T <= 0:
+            raise ValueError("discrete sample() on a continuous law")
+        if self.probs is not None:
+            logits = jnp.log(jnp.asarray(self.probs) + 1e-30)
+            return 1 + jax.random.categorical(key, logits, shape=shape)
+        a, b = self.beta_params
+        u = jax.random.beta(key, a, b, shape)
+        return jnp.clip(jnp.round(u * self.T).astype(jnp.int32), 1, self.T)
+
+    # ---------------- continuous sampling ----------------
+    def sample_continuous(self, key: jax.Array, shape: tuple[int, ...]) -> Array:
+        """Sample real-valued transition times in (0, 1] (DNDM-C)."""
+        if self.beta_params is not None:
+            a, b = self.beta_params
+            return jax.random.beta(key, a, b, shape)
+        # inverse-CDF on the discrete grid, then jitter within the bin
+        p = jnp.asarray(self.probs)
+        k_cat, k_u = jax.random.split(key)
+        t = jax.random.categorical(k_cat, jnp.log(p + 1e-30), shape=shape)
+        u = jax.random.uniform(k_u, shape)
+        return (t.astype(jnp.float32) + u) / self.T
+
+    # ---------------- Theorem D.1 ----------------
+    def expected_nfe(self, N: int) -> float:
+        """E|T| = [1 - C_{T,N,D}] * T with C = (sum_i (1-p_i)^N) / T."""
+        if self.probs is None:
+            raise ValueError("expected_nfe needs a discretized law; "
+                             "use beta_approx() instead of beta_continuous()")
+        p = self.probs.astype(np.float64)
+        c = np.sum((1.0 - p) ** N) / self.T
+        return float((1.0 - c) * self.T)
+
+
+def from_schedule(schedule: Schedule) -> TransitionDist:
+    """The exact law of Theorem 3.6: P(tau=t) = alpha_{t-1} - alpha_t."""
+    return TransitionDist(name=f"thm3.6[{schedule.name}]", T=schedule.T,
+                          probs=schedule.transition_probs())
+
+
+def beta_approx(T: int, a: float, b: float) -> TransitionDist:
+    """Beta(a, b) reshaped onto {1..T} (paper §3.2: sample u ~ Beta, t =
+    round(u T)).  Used with validation-tuned (a, b), e.g. Beta(15, 7)."""
+    # Discretize for expected_nfe / analysis; sampling can use either path.
+    edges = np.linspace(0.0, 1.0, T + 1)
+    cdf = _beta_cdf(edges, a, b)
+    probs = np.diff(cdf)
+    probs = np.maximum(probs, 0)
+    probs = probs / probs.sum()
+    return TransitionDist(name=f"beta({a},{b})", T=T, probs=probs,
+                          beta_params=(a, b))
+
+
+def beta_continuous(a: float, b: float) -> TransitionDist:
+    """Continuous Beta(a, b) law for DNDM-C timestamps."""
+    return TransitionDist(name=f"beta_c({a},{b})", T=0, probs=None,
+                          beta_params=(a, b))
+
+
+def _beta_cdf(x: np.ndarray, a: float, b: float, n: int = 4096) -> np.ndarray:
+    """Regularized incomplete beta via trapezoid quadrature (no scipy)."""
+    grid = np.linspace(0.0, 1.0, n + 1)
+    # pdf ~ u^(a-1) (1-u)^(b-1); handle endpoint singularities for a,b < 1
+    with np.errstate(divide="ignore", invalid="ignore"):
+        pdf = grid ** (a - 1.0) * (1.0 - grid) ** (b - 1.0)
+    pdf = np.nan_to_num(pdf, posinf=0.0)
+    cdf = np.concatenate([[0.0], np.cumsum((pdf[1:] + pdf[:-1]) * 0.5)])
+    cdf /= cdf[-1]
+    return np.interp(x, grid, cdf)
+
+
+# ------------------------------------------------------------------
+# Transition sets
+# ------------------------------------------------------------------
+
+def sample_transition_times(
+    key: jax.Array,
+    dist: TransitionDist,
+    batch: int,
+    N: int,
+    order: Literal["iid", "l2r", "r2l"] = "iid",
+    shared: bool = False,
+) -> Array:
+    """Sample tau for every token: (batch, N) int32 in {1..T}.
+
+    ``order`` implements App. C Table 6: "l2r" reassigns the sampled times so
+    that left positions transition *later in forward time* — i.e. they are
+    denoised (revealed) earlier in the reverse process, which the paper found
+    to work best; "r2l" is the mirror image.
+
+    ``shared=True`` draws ONE transition-time set and broadcasts it across
+    the batch — this matches the paper's batched NFE accounting (Tables
+    7/8 report per-batch NFE ~= per-row E|T|), since the network is called
+    once per unique time in the whole batch.
+    """
+    if shared:
+        tau1 = dist.sample(key, (1, N)).astype(jnp.int32)
+        tau = jnp.broadcast_to(tau1, (batch, N))
+    else:
+        tau = dist.sample(key, (batch, N)).astype(jnp.int32)
+    if order == "iid":
+        return tau
+    # sort each row's times; assign descending (l2r) or ascending (r2l)
+    srt = jnp.sort(tau, axis=-1)
+    if order == "l2r":
+        return srt[:, ::-1]  # leftmost token gets the largest tau
+    return srt
+
+
+def nfe_of(tau: Array, T: int) -> Array:
+    """|T| per batch row: number of *distinct* transition times (the NFE)."""
+    # bincount over {1..T} per row
+    def row(tr):
+        counts = jnp.zeros((T + 1,), jnp.int32).at[tr].add(1)
+        return (counts[1:] > 0).sum()
+    return jax.vmap(row)(tau)
+
+
+def transition_mask_per_step(tau: Array, T: int) -> Array:
+    """(T, batch) bool: does step t host at least one transition in the row?"""
+    def row(tr):
+        counts = jnp.zeros((T + 1,), jnp.int32).at[tr].add(1)
+        return counts[1:] > 0
+    return jnp.moveaxis(jax.vmap(row)(tau), -1, 0)
+
+
+def expected_nfe_mc(dist: TransitionDist, N: int, batch: int,
+                    key: jax.Array) -> float:
+    """Monte-Carlo E|T| (used in tests against Theorem D.1)."""
+    tau = dist.sample(key, (batch, N))
+    return float(jnp.mean(nfe_of(tau, dist.T)))

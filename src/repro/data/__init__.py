@@ -1,0 +1,7 @@
+"""Data substrate: tokenizers, synthetic corpora, batch pipeline."""
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.data.synthetic import MarkovLanguage, TranslationTask, bleu
+from repro.data.tokenizer import ByteTokenizer, CharTokenizer
+
+__all__ = ["DataConfig", "DataPipeline", "MarkovLanguage",
+           "TranslationTask", "bleu", "ByteTokenizer", "CharTokenizer"]

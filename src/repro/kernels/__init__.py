@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as a package: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle used by the
+allclose test sweeps).  On this CPU container kernels run with
+interpret=True; on TPU the same call sites compile to Mosaic.
+"""

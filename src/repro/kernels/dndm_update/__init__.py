@@ -1,0 +1,4 @@
+from repro.kernels.dndm_update import ops, ref
+from repro.kernels.dndm_update.kernel import dndm_update_kernel
+
+__all__ = ["ops", "ref", "dndm_update_kernel"]

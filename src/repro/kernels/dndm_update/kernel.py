@@ -1,0 +1,75 @@
+"""Fused DNDM transition update — Pallas kernel.
+
+The inner loop of Algorithm 1/3 is: decode x0_hat = argmax_K(logits) and
+apply eq. (9): x_{t-1} = where(tau == t, x0_hat, x_t) (or tau >= t for
+Algorithm 3).  Done naively this materializes the (B, N, K) softmax/argmax
+intermediate in HBM; fused, it is one streaming pass: logits tiles are
+consumed block-by-block over the vocab with a running (max, argmax) pair
+in VMEM, and the token update happens in-register on the last vocab block.
+
+grid = (B, num_token_blocks, num_vocab_blocks), vocab innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dndm_kernel(logits_ref, x_ref, tau_ref, t_ref, o_ref,
+                 m_scr, idx_scr, *, nk: int, bkv: int, version: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        idx_scr[...] = jnp.zeros_like(idx_scr)
+
+    blk = logits_ref[0].astype(jnp.float32)             # (bn, bkv)
+    local_max = blk.max(axis=1)
+    local_arg = blk.argmax(axis=1).astype(jnp.int32) + ik * bkv
+    better = local_max > m_scr[...]
+    m_scr[...] = jnp.where(better, local_max, m_scr[...])
+    idx_scr[...] = jnp.where(better, local_arg, idx_scr[...])
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        x = x_ref[0]
+        tau = tau_ref[0]
+        t = t_ref[0]
+        cond = (tau == t) if version == 1 else (tau >= t)
+        o_ref[0] = jnp.where(cond, idx_scr[...], x)
+
+
+def dndm_update_kernel(logits, x, tau, t, *, version: int = 1,
+                       block_n: int = 256, block_v: int = 1024,
+                       interpret: bool = True):
+    """logits: (B,N,K); x, tau: (B,N) int32; t: (1,) int32.
+    Returns updated tokens (B,N) int32."""
+    B, N, K = logits.shape
+    bn = min(block_n, N)
+    bkv = min(block_v, K)
+    if N % bn or K % bkv:
+        raise ValueError(f"(N,K)=({N},{K}) must divide blocks ({bn},{bkv})")
+    nn, nk = N // bn, K // bkv
+
+    return pl.pallas_call(
+        functools.partial(_dndm_kernel, nk=nk, bkv=bkv, version=version),
+        grid=(B, nn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bn, bkv), lambda b, i, k: (b, i, k)),
+            pl.BlockSpec((1, bn), lambda b, i, k: (b, i)),
+            pl.BlockSpec((1, bn), lambda b, i, k: (b, i)),
+            pl.BlockSpec((1,), lambda b, i, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda b, i, k: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((bn,), jnp.float32),
+            pltpu.VMEM((bn,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits, x, tau, t)

@@ -1,0 +1,33 @@
+"""jit'd wrapper for the fused DNDM update (pads N and K to blocks)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dndm_update.kernel import dndm_update_kernel
+
+
+@partial(jax.jit, static_argnames=("version", "block_n", "block_v",
+                                   "interpret"))
+def dndm_update(logits, x, tau, t, *, version: int = 1, block_n: int = 256,
+                block_v: int = 1024, interpret: bool = True):
+    """logits: (B,N,K); x, tau: (B,N) int32; t scalar int32."""
+    B, N, K = logits.shape
+    bn = min(block_n, N)
+    bkv = min(block_v, K)
+    pad_n = (-N) % bn
+    pad_k = (-K) % bkv
+    if pad_n:
+        logits = jnp.pad(logits, ((0, 0), (0, pad_n), (0, 0)))
+        x = jnp.pad(x, ((0, 0), (0, pad_n)))
+        tau = jnp.pad(tau, ((0, 0), (0, pad_n)))
+    if pad_k:
+        logits = jnp.pad(logits, ((0, 0), (0, 0), (0, pad_k)),
+                         constant_values=-jnp.inf)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(1)
+    out = dndm_update_kernel(logits, x.astype(jnp.int32),
+                             tau.astype(jnp.int32), t_arr, version=version,
+                             block_n=bn, block_v=bkv, interpret=interpret)
+    return out[:, :N]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the fused DNDM transition update."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dndm_update_ref(logits, x, tau, t, *, version: int = 1):
+    """logits: (B,N,K); x, tau: (B,N); t: (1,) — eq. (9) with argmax x0."""
+    x0_hat = logits.argmax(-1).astype(jnp.int32)
+    cond = (tau == t[0]) if version == 1 else (tau >= t[0])
+    return jnp.where(cond, x0_hat, x)

@@ -1,0 +1,87 @@
+"""Flash-attention Pallas kernel (TPU target, interpret-validated on CPU).
+
+Online-softmax attention with explicit VMEM tiling:
+  grid = (B, H, num_q_blocks, num_k_blocks); the k dimension is the
+  innermost (sequential) axis, so the running (m, l, acc) statistics live
+  in VMEM scratch across k iterations and the output tile is written once
+  on the last k block.  Default blocks 256x256 with head_dim lanes —
+  contracting dims MXU-aligned for hd in {64, 128}.
+
+Layout: q, k, v are (B, H, S, hd); the additive bias (mask) is (B, Sq, Sk)
+shared across heads — the ops wrapper materializes causal / sliding-window
+masks or forwards user bias.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e9
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, nk: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+    bias = bias_ref[0].astype(jnp.float32)       # (bq, bk)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale + bias
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_prev * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, bias, *, block_q: int = 256,
+                           block_k: int = 256, interpret: bool = True):
+    """q,k,v: (B,H,S,hd); bias: (B,Sq,Sk).  Returns (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    if Sq % bq or Sk % bk:
+        raise ValueError(f"S ({Sq},{Sk}) must divide blocks ({bq},{bk})")
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / (hd ** 0.5)
+
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, nk=nk),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, bq, bk), lambda b, h, iq, ik: (b, iq, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max m
+            pltpu.VMEM((bq,), jnp.float32),      # running sum l
+            pltpu.VMEM((bq, hd), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

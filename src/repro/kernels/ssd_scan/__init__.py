@@ -1,0 +1,4 @@
+from repro.kernels.ssd_scan import ops, ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+
+__all__ = ["ops", "ref", "ssd_scan_kernel"]

@@ -1,0 +1,81 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel.
+
+TPU adaptation of the SSD algorithm: instead of a GPU-style parallel
+prefix scan over single steps, the sequence is processed in VMEM-resident
+chunks of length L; each chunk does three small MXU matmuls
+((L,N)x(N,L), (L,L)x(L,P), (L,N)x(N,P)) plus the rank-1 state update, and
+the (N, P) running state is carried across the chunk grid dimension in
+VMEM scratch — the sequential dependency is per-chunk, not per-step.
+
+grid = (B, H, num_chunks), chunks innermost (sequential).
+Inputs (rearranged by ops.py):
+  x  : (B, H, C, L, P)   dt : (B, H, C, L)
+  A  : (H,)  (negative)  Bm, Cm : (B, C, L, N)  (shared across heads)
+Output: y : (B, H, C, L, P)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # (L, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # (L,)
+    a = a_ref[0].astype(jnp.float32)             # scalar
+    bm = b_ref[0, 0].astype(jnp.float32)         # (L, N)
+    cm = c_ref[0, 0].astype(jnp.float32)         # (L, N)
+    L = x.shape[0]
+
+    logdec = dt * a                              # (L,) <= 0
+    cs = jnp.cumsum(logdec)
+    gap = cs[:, None] - cs[None, :]              # decay(j -> i)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    dec = jnp.where(tri, jnp.exp(gap), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))   # (L, L)
+    M = cb * dec * dt[None, :]
+    y_intra = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())))
+
+    state = state_scr[...]                       # (N, P)
+    y_inter = jax.lax.dot_general(cm, state, (((1,), (0,)), ((), ()))) \
+        * jnp.exp(cs)[:, None]
+    y_ref[0, 0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: S <- exp(cs_L) S + sum_j exp(cs_L - cs_j) dt_j B_j x_j
+    wj = jnp.exp(cs[-1] - cs) * dt               # (L,)
+    sb = jax.lax.dot_general(bm * wj[:, None], x,
+                             (((0,), (0,)), ((), ())))           # (N, P)
+    state_scr[...] = jnp.exp(cs[-1]) * state + sb
+
+
+def ssd_scan_kernel(x, dt, A, Bm, Cm, *, interpret: bool = True):
+    """Shapes as in the module docstring.  Returns y (B,H,C,L,P)."""
+    B, H, C, L, P = x.shape
+    N = Bm.shape[-1]
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(B, H, C),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, L, P),
+                               lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, C, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the SSD scan kernel.
+
+``ssd_scan_ref`` re-exports the chunked reference used by the Mamba-2
+block; ``ssd_sequential_ref`` is the step-by-step recurrence — the ground
+truth both the chunked form and the kernel must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.mamba2 import _ssd_scan_ref as ssd_chunked_ref  # noqa: F401
+
+
+def ssd_sequential_ref(x, dtv, A, Bm, Cm):
+    """x: (B,S,H,P); dtv: (B,S,H); A: (H,); Bm/Cm: (B,S,N).
+    Exact per-step recurrence; returns (y, final_state)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        dec = jnp.exp(dt_t * A)                       # (B,H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t, x_t)
+        state = state * dec[..., None, None] + upd
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    s0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dtv.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3), final

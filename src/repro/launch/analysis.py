@@ -1,0 +1,204 @@
+"""Compiled-artifact analysis: collective-byte parsing, analytic FLOPs,
+and the three roofline terms (compute / memory / collective).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM per chip, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes of every collective op in the HLO text.
+
+    (Result bytes ~ data moved per chip for AR/AG; a documented proxy.)
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.frontend_attributes=.*)?(.+?) "
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start|-done)?\(", ls)
+        if not m:
+            continue
+        op = m.group(3)
+        if m.group(4) == "-done":
+            continue                        # counted at -start
+        out[op] += _shape_bytes(m.group(2))
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All times in seconds (per chip, per step)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float                # per chip (from cost_analysis)
+    hlo_bytes: float                # per chip
+    coll_bytes: float               # per chip
+    model_flops: float              # analytic, whole program
+    scan_correction_flops: float    # sequential-scan flops invisible to HLO
+    n_chips: int = 256
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs (remat/redundancy waste)."""
+        tot = self.hlo_flops * self.n_chips
+        return self.model_flops / tot if tot else float("nan")
+
+
+def roofline(cost: dict, coll: dict[str, int], n_chips: int,
+             model_flops: float, scan_correction: float = 0.0,
+             bytes_correction: float = 0.0,
+             links_per_chip: float = 2.0) -> RooflineTerms:
+    """cost: compiled.cost_analysis() dict (per-chip numbers on SPMD).
+
+    collective bytes from the HLO are per-chip result shapes already.
+    Corrections are whole-program and distributed evenly across chips.
+    """
+    flops = float(cost.get("flops", 0.0)) + scan_correction / n_chips
+    bytes_ = max(0.0, float(cost.get("bytes accessed", 0.0)) +
+                 bytes_correction / n_chips)
+    cbytes = float(sum(v for k, v in coll.items() if k != "count"))
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_ / HBM_BW,
+        collective_s=cbytes / (ICI_BW * links_per_chip),
+        hlo_flops=flops, hlo_bytes=bytes_, coll_bytes=cbytes,
+        model_flops=model_flops,
+        scan_correction_flops=scan_correction,
+        n_chips=n_chips,
+    )
+
+
+# ------------------------------------------------------------------
+# Analytic model FLOPs
+# ------------------------------------------------------------------
+
+def param_counts(model) -> tuple[int, int]:
+    """(total, active) parameter counts from eval_shape (no allocation)."""
+    import jax
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    cfg = model.cfg
+    active = total
+    if cfg.n_experts:
+        flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+        moe_params = 0
+        for kp, leaf in flat:
+            p = "/".join(str(getattr(k, "key", k)) for k in kp)
+            if "/moe/" in p and not p.endswith("router"):
+                moe_params += int(np.prod(leaf.shape))
+        active = total - int(
+            moe_params * (1 - cfg.experts_per_token / cfg.n_experts))
+    return total, active
+
+
+def model_flops(model, n_tokens: int, mode: str) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference passes."""
+    _, active = param_counts(model)
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * active * n_tokens
+
+
+def scan_correction(cfg, batch: int, seq: int, mode: str) -> float:
+    """FLOPs hidden inside sequential (time-axis) scans that XLA cost
+    analysis counts only once: the sLSTM recurrent matmul.
+
+    Per step per layer: (B, nh, dh) x (nh, dh, 4dh) = B*d*4dh MACs.
+    """
+    n_slstm = sum(1 for k in cfg.block_pattern if k == "slstm")
+    if not n_slstm or mode == "decode":
+        return 0.0
+    nh = cfg.lstm_heads
+    dh = cfg.d_model // nh
+    per_step = 2.0 * batch * cfg.d_model * 4 * dh
+    steps = seq * (2 if cfg.bidirectional else 1)
+    fb = 3.0 if mode == "train" else 1.0       # fwd+bwd multiplier
+    return n_slstm * per_step * steps * fb
+
+
+def flash_attn_correction(cfg, batch: int, seq: int,
+                          mode: str) -> tuple[float, float]:
+    """(flops_corr, bytes_corr) when ``attn_impl == "blocked"``.
+
+    The blocked (lax.scan) attention stands in for the Pallas flash
+    kernel; XLA costs only one KV block.  We (a) add the missing blocks'
+    FLOPs exactly, and (b) replace the counted block's HBM traffic with
+    the fused kernel's model — Q, K, V read once and O written once per
+    layer (the S^2 logits never leave VMEM on TPU).  bytes_corr can be
+    negative.  Whole-program (all chips) numbers.
+    """
+    if cfg.attn_impl != "blocked" or mode == "decode":
+        return 0.0, 0.0
+    n_attn = sum(1 for k in cfg.block_pattern
+                 if k in ("attn", "swa", "moe", "shared_attn"))
+    if not n_attn:
+        return 0.0, 0.0
+    B, S, H, hd = batch, seq, cfg.n_heads, cfg.hd
+    nk = max(1, -(-S // cfg.attn_block_k))
+    dirs = 2 if cfg.bidirectional else 1
+    fb = 3.0 if mode == "train" else 1.0
+    dt_bytes = 2 if "16" in cfg.dtype else 4
+
+    full = 4.0 * B * H * S * S * hd            # QK^T + PV (fwd, one dir)
+    counted = full / nk
+    flops_corr = (full - counted) * n_attn * dirs * fb
+
+    flash_bytes = 4.0 * B * S * H * hd * dt_bytes          # q,k,v,o once
+    # the counted block's dominant traffic: logits written + re-read by
+    # softmax + probs read by PV: ~3 x (B,H,S,S/nk) fp32
+    counted_bytes = 3.0 * B * H * S * (S / nk) * 4.0
+    bytes_corr = (flash_bytes - counted_bytes) * n_attn * dirs * fb
+    return flops_corr, bytes_corr
+
+
+def corrections(cfg, batch: int, seq: int, mode: str) -> dict:
+    """All analytic corrections for scan-hidden / kernel-fused compute."""
+    f = scan_correction(cfg, batch, seq, mode)
+    fa, ba = flash_attn_correction(cfg, batch, seq, mode)
+    return {"flops": f + fa, "bytes": ba,
+            "slstm_flops": f, "flash_flops": fa, "flash_bytes": ba}

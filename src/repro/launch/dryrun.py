@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, record memory / cost / collective analysis.
+
+MUST be the process entry (python -m repro.launch.dryrun ...): the
+XLA_FLAGS line above runs before any other import so the 512 placeholder
+devices exist before jax locks the device count.
+
+Per combination we lower the step the shape dictates:
+  train_4k     -> train_step(state, batch, key)     (loss+grads+AdamW)
+  prefill_32k  -> denoiser forward (one DNDM NFE)
+  decode_*     -> serve_step(params, token, cache, pos)
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.configs as configs_lib
+from repro.configs.shapes import SHAPES
+from repro.core import noise as noise_lib, schedules as sched_lib
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (ShardingPolicy, cache_spec, data_axes,
+                                   shard_params_tree, tokens_spec)
+from repro.models.frontend import frontend_spec
+from repro.models.model import Model
+from repro.training.optim import AdamW, constant
+from repro.training.trainer import make_train_step
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def build_model(arch: str, shape_name: str, policy: ShardingPolicy,
+                dtype: str = "bfloat16", remat: bool = True,
+                overrides: dict | None = None) -> Model:
+    cfg = configs_lib.get(arch)
+    shp = SHAPES[shape_name]
+    if shp.name == "long_500k":
+        cfg = configs_lib.for_long_context(cfg)
+    # unrolled layer stack => XLA cost analysis sees every layer
+    cfg = cfg.replace(dtype=dtype, scan_layers=False,
+                      remat=(remat and shp.kind == "train"),
+                      bidirectional=(shp.kind != "decode"))
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return Model(cfg)
+
+
+def input_specs(model: Model, shape_name: str, mesh,
+                policy: ShardingPolicy) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    cfg = model.cfg
+    shp = SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    da = data_axes(mesh)
+    tok_spec = tokens_spec(mesh, B, policy,
+                           seq_shard=(shp.kind in ("train", "prefill")))
+    specs: dict = {}
+    if shp.kind in ("train", "prefill"):
+        specs["tokens"] = _sds((B, S), jnp.int32, mesh, tok_spec)
+        specs["t"] = _sds((B,), jnp.float32, mesh, P(*tok_spec[:1]))
+        if cfg.frontend:
+            fs = frontend_spec(cfg, B)
+            specs["frontend_embeds"] = _sds(
+                fs.shape, fs.dtype, mesh, P(*tok_spec[:1], None, None))
+    else:
+        specs["token"] = _sds((B, 1), jnp.int32, mesh, tok_spec)
+        specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(B, S, jnp.dtype(cfg.dtype)))
+        def attach(path, leaf):
+            last = str(getattr(path[-1], "key", path[-1]))
+            kind = "kv" if last in ("k", "v") else "ssm"
+            spec = cache_spec(mesh, leaf.shape, B, policy, kind)
+            return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                        sharding=NamedSharding(mesh, spec))
+        flat, td = jax.tree_util.tree_flatten_with_path(cache_shapes)
+        specs["cache"] = jax.tree_util.tree_unflatten(
+            td, [attach(kp, leaf) for kp, leaf in flat])
+    return specs
+
+
+def param_specs(model: Model, mesh, policy: ShardingPolicy):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return shard_params_tree(shapes, mesh, policy, model.cfg)
+
+
+def state_specs(model: Model, optimizer, mesh, policy: ShardingPolicy):
+    params = param_specs(model, mesh, policy)
+    opt = {"mu": params, "nu": params,
+           "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def lower_one(arch: str, shape_name: str, mesh, policy: ShardingPolicy,
+              remat: bool = True, overrides: dict | None = None):
+    """Returns (lowered, compiled, model, wall_times)."""
+    overrides = dict(overrides or {})
+    microbatches = overrides.pop("microbatches", 1)   # trainer-level knob
+    model = build_model(arch, shape_name, policy, remat=remat,
+                        overrides=overrides)
+    cfg = model.cfg
+    shp = SHAPES[shape_name]
+    specs = input_specs(model, shape_name, mesh, policy)
+    t0 = time.time()
+
+    # ambient mesh (jax.set_mesh) so shard_map-based blocks (MoE) can
+    # resolve axis names without threading the mesh through the model
+    with jax.set_mesh(mesh):
+        if shp.kind == "train":
+            sch = sched_lib.linear(50)
+            nz = noise_lib.absorbing(cfg.vocab_size)
+            opt = AdamW(schedule=constant(1e-4))
+            step = make_train_step(model, sch, nz, opt,
+                                   microbatches=microbatches)
+            state = state_specs(model, opt, mesh, policy)
+            batch = {"x0": specs["tokens"]}
+            if cfg.frontend:
+                batch["frontend_embeds"] = specs["frontend_embeds"]
+            key = jax.random.PRNGKey(0)
+            lowered = jax.jit(step).lower(state, batch, key)
+        elif shp.kind == "prefill":
+            params = param_specs(model, mesh, policy)
+
+            def prefill(params, tokens, t, fe=None):
+                logits, _ = model.forward(params, tokens, t, fe,
+                                          causal=False)
+                return logits
+
+            args = [params, specs["tokens"], specs["t"]]
+            if cfg.frontend:
+                args.append(specs["frontend_embeds"])
+            lowered = jax.jit(prefill).lower(*args)
+        else:
+            params = param_specs(model, mesh, policy)
+
+            def serve_step(params, token, cache, pos):
+                return model.decode_step(params, token, cache, pos)
+
+            lowered = jax.jit(serve_step, donate_argnums=(2,)).lower(
+                params, specs["token"], specs["cache"], specs["pos"])
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return lowered, compiled, model, {"lower_s": t_lower,
+                                      "compile_s": t_compile}
+
+
+def analyse(arch: str, shape_name: str, mesh_name: str, compiled, model,
+            walls: dict) -> dict:
+    shp = SHAPES[shape_name]
+    n_chips = 512 if mesh_name == "multi_pod" else 256
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = analysis.collective_bytes(compiled.as_text())
+    n_tokens = (shp.global_batch * shp.seq_len
+                if shp.kind in ("train", "prefill") else shp.global_batch)
+    mode = {"train": "train", "prefill": "prefill",
+            "decode": "decode"}[shp.kind]
+    mf = analysis.model_flops(model, n_tokens, mode)
+    corr = analysis.corrections(model.cfg, shp.global_batch,
+                                shp.seq_len, mode)
+    terms = analysis.roofline(cost, coll, n_chips, mf, corr["flops"],
+                              corr["bytes"])
+    total, active = analysis.param_counts(model)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_chips": n_chips,
+        "params_total": total, "params_active": active,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed") if k in cost},
+        "collectives": coll,
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "model_flops": terms.model_flops,
+            "hlo_flops_per_chip": terms.hlo_flops,
+            "useful_ratio": terms.useful_ratio,
+            "scan_correction_flops": terms.scan_correction_flops,
+        },
+        "walls": walls,
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: str, policy: ShardingPolicy | None = None,
+            tag: str = "", overrides: dict | None = None) -> dict:
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    out_path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_name}{tag}.json")
+    policy = policy or ShardingPolicy()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        lowered, compiled, model, walls = lower_one(
+            arch, shape_name, mesh, policy, overrides=overrides)
+        rec = analyse(arch, shape_name, mesh_name, compiled, model, walls)
+        rec["status"] = "ok"
+        rec["tag"] = tag
+        rec["overrides"] = overrides or {}
+    except Exception as e:  # noqa: BLE001 — record failures, don't die
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = (configs_lib.ASSIGNED_ARCHS if args.arch == "all"
+             else [args.arch])
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                mesh_name = "multi_pod" if mp else "single_pod"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"skip {path}")
+                    continue
+                t0 = time.time()
+                rec = run_one(arch, shape_name, mp, args.out)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']}"
+                             f" c={r['compute_s']:.2e}s"
+                             f" m={r['memory_s']:.2e}s"
+                             f" x={r['collective_s']:.2e}s")
+                else:
+                    extra = " " + rec["error"][:120]
+                print(f"[{time.time()-t0:6.1f}s] {arch} x {shape_name} x "
+                      f"{mesh_name}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

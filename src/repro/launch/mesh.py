@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips (TPU v5e pod).
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips.
+
+``make_production_mesh`` is a function (not a module constant) so that
+importing this module never touches jax device state; callers must have
+set ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before*
+jax's first initialization (dryrun.py does this in its first two lines).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Axes used for data parallelism: ("pod","data") or ("data",)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh: jax.sharding.Mesh, *names: str) -> int:
+    s = 1
+    for n in names:
+        s *= mesh.shape[n]
+    return s

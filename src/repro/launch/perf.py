@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""§Perf hillclimbing driver — hypothesis -> change -> measure -> validate.
+
+Runs the three chosen (arch x shape) pairs through their iteration
+ladders (single-pod mesh, per the brief: roofline table is single-pod).
+Each iteration is one config/policy delta over the previous; results land
+in results/perf/<pair>__<tag>.json and the before/after log is printed
+for EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m repro.launch.perf [pair ...]
+    pairs: mixtral_train | deepseek_prefill | xlstm_prefill
+"""
+import json
+import sys
+import time
+
+from repro.launch.dryrun import run_one
+from repro.launch.sharding import ShardingPolicy
+
+OUT = "results/perf"
+
+# Each entry: (pair_name, arch, shape, [(tag, hypothesis, overrides,
+#                                        policy_kwargs), ...])
+LADDERS = [
+    (
+        "mixtral_train", "mixtral-8x7b", "train_4k",
+        [
+            ("it1_local_dispatch",
+             "GSPMD cannot shard the global sort-based MoE dispatch and "
+             "replicates the (2.6M, 4096) expert buffers across the model "
+             "axis (9 TB/chip all-reduce, useful_ratio 0.04). Dispatching "
+             "within 16 data-aligned groups (vmap over a sharded leading "
+             "dim) keeps every op shardable: expect collective term to "
+             "drop >10x and useful_ratio toward ~0.5.",
+             {"moe_dispatch": "local", "moe_local_groups": 16}, {}),
+            ("it2_shard_map",
+             "REFUTED it1 taught us GSPMD replicates the scatter across "
+             "the *data* axis regardless (flops/chip == total/16, AG 4 "
+             "TB). shard_map makes locality structural: per-shard "
+             "dispatch, local (E,d,ff/16) expert matmuls, one explicit "
+             "psum(model) per layer. Expect flops/chip -16x (useful "
+             "0.04 -> ~0.5) and collective term -50x.",
+             {"moe_dispatch": "shard_map"}, {}),
+            ("it3_shard_map_blocked_attn",
+             "With MoE fixed, the remaining memory term is the 4k x 4k "
+             "SWA attention scores (B/chip=16, H=32). Blocked attention "
+             "(flash-kernel model) removes the S^2 HBM traffic: expect "
+             "memory term -30%+.",
+             {"moe_dispatch": "shard_map",
+              "attn_impl": "blocked", "attn_block_k": 1024}, {}),
+            ("it4_microbatch4",
+             "it2/it3 fixed time terms but the pair still does not FIT "
+             "(725 GB/chip temp > 16 GB HBM). Gradient accumulation over "
+             "4 unrolled microbatches keeps one microbatch of "
+             "activations live: expect temp ~ /4 (+ params), roofline "
+             "terms ~flat (same total bytes/flops). k=16 is the "
+             "extrapolated production setting.",
+             {"moe_dispatch": "shard_map", "microbatches": 4}, {}),
+        ],
+    ),
+    (
+        # bonus 4th pair (beyond the required three): the EP all-to-all
+        "llama4_train", "llama4-maverick-400b-a17b", "train_4k",
+        [
+            ("it1_shard_map_ep",
+             "llama4 has 128 experts (divisible by model=16), so the "
+             "shard_map dispatch can run true expert parallelism: token "
+             "slices travel to their experts via all-to-all (2 x buffer "
+             "bytes/layer) instead of TP-psum. From the mixtral result "
+             "expect collective 74 s -> ~3 s with the a2a signature, "
+             "useful 0.065 -> ~0.5, and memory down ~5x.",
+             {"moe_dispatch": "shard_map"}, {}),
+        ],
+    ),
+    (
+        "deepseek_prefill", "deepseek-7b", "prefill_32k",
+        [
+            ("it1_flash_attn",
+             "The denoiser NFE pass (DNDM's unit of cost) is memory-bound "
+             "on naive 32k^2 attention: scores are 2*32*32768^2*4B/chip "
+             "read+written ~3x. The Pallas flash kernel keeps logits in "
+             "VMEM (q,k,v,o HBM traffic only): expect memory term to "
+             "drop ~5-10x and the pair to go compute-bound.",
+             {"attn_impl": "blocked", "attn_block_k": 2048}, {}),
+            ("it2_seq_parallel",
+             "After flash, per-chip activations (B/chip=2, S=32k, d=4096) "
+             "dominate bytes. Sharding the *sequence* dim of activations "
+             "over the data axis (ring of 16) cuts per-chip activation "
+             "traffic 16x at the cost of boundary collectives: expect "
+             "memory term down, collective term up slightly.",
+             {"attn_impl": "blocked", "attn_block_k": 2048},
+             {"shard_seq_train": True}),
+        ],
+    ),
+    (
+        "xlstm_prefill", "xlstm-350m", "prefill_32k",
+        [
+            ("it1_chunked_mlstm",
+             "mLSTM's parallel form materializes the (B, 32k, 32k, nh) "
+             "decay matrix: useful_ratio 0.005, memory term 16s. The "
+             "chunkwise form (L=2048, unrolled for costing) carries a "
+             "(dh x dh) state across chunks: expect S^2 -> S*L, i.e. "
+             "memory term -16x and hlo_flops -10x.",
+             {"mlstm_chunk": 2048, "mlstm_unroll": True}, {}),
+            ("it2_larger_chunks",
+             "it1 cut memory 3.5x, not the predicted 16x: the surviving "
+             "bytes are the chunked intra terms plus up/qkv projections. "
+             "L=4096 halves the number of (dh x dh) state updates while "
+             "doubling the intra-chunk quadratic: if memory stays ~flat "
+             "the projections dominate and further chunk tuning is dead "
+             "(<5% lever) — locates the new bottleneck.",
+             {"mlstm_chunk": 4096, "mlstm_unroll": True}, {}),
+            ("it3_seq_parallel",
+             "With the quadratic gone, activations (B=32, S=32k, d=1k "
+             "streams) should dominate like deepseek it2: shard the "
+             "sequence dim over the data axis. Expect memory -2x.",
+             {"mlstm_chunk": 4096, "mlstm_unroll": True},
+             {"shard_seq_train": True}),
+        ],
+    ),
+]
+
+
+def main():
+    only = sys.argv[1:]
+    os.makedirs(OUT, exist_ok=True)
+    for pair, arch, shape, ladder in LADDERS:
+        if only and pair not in only:
+            continue
+        print(f"\n===== {pair}: {arch} x {shape} =====", flush=True)
+        for tag, hypothesis, overrides, pol_kw in ladder:
+            t0 = time.time()
+            policy = ShardingPolicy(**pol_kw)
+            rec = run_one(arch, shape, multi_pod=False, out_dir=OUT,
+                          policy=policy, tag="__" + tag,
+                          overrides=overrides)
+            if rec["status"] == "ok":
+                r = rec["roofline"]
+                print(f"[{time.time()-t0:6.1f}s] {tag}: "
+                      f"c={r['compute_s']:.3e} m={r['memory_s']:.3e} "
+                      f"x={r['collective_s']:.3e} dom={r['dominant']} "
+                      f"useful={r['useful_ratio']:.3f}", flush=True)
+            else:
+                print(f"[{time.time()-t0:6.1f}s] {tag}: ERROR "
+                      f"{rec['error'][:200]}", flush=True)
+            print(f"  hypothesis: {hypothesis}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Declarative sharding rules: param-path / activation -> PartitionSpec.
+
+``ShardingPolicy`` is the hillclimbing surface: every §Perf iteration
+that changes a sharding scheme changes exactly one field here, so
+baseline and optimized configurations are reproducible side by side.
+
+All rules degrade gracefully: an axis is only applied when the dimension
+is divisible by the axis size (``_ok``), otherwise that dim is
+replicated — no config can fail to lower because of divisibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Baseline = classic Megatron-style TP + DP, expert-parallel MoE."""
+
+    attn_tp: bool = True             # shard attention heads on "model"
+    mlp_tp: bool = True              # shard d_ff on "model"
+    moe_expert_parallel: bool = True  # experts on "model" when divisible
+    ssm_tp: bool = False             # baseline: SSM/xLSTM blocks replicated
+    embed_vocab_shard: bool = True   # embedding rows on "model"
+    # activations
+    shard_seq_train: bool = False    # sequence parallelism on "data"
+    decode_cache_seq: str = "auto"   # "auto": shard cache seq on "data"
+    #   when the batch is too small to fill the data axis; "always"/"never"
+    logits_vocab_shard: bool = True
+
+
+def _ok(dim: int, mesh, *axes: str) -> bool:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim % size == 0 and size > 1
+
+
+def _spec(mesh, shape, assignment: dict[int, tuple[str, ...]]) -> P:
+    """Build a PartitionSpec, dropping non-divisible assignments."""
+    entries = []
+    for i, dim in enumerate(shape):
+        axes = assignment.get(i)
+        if axes and all(a in mesh.axis_names for a in axes) and \
+                _ok(dim, mesh, *axes):
+            entries.append(axes if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+# ------------------------------------------------------------------
+# Parameter rules
+# ------------------------------------------------------------------
+
+_RULES: list[tuple[str, dict[int, tuple[str, ...]]]] = [
+    # (regex on "/".join(path) WITHOUT the leading stack dim, rule)
+    (r".*/attn/wq$", {1: ("model",)}),
+    (r".*/attn/wk$", {1: ("model",)}),
+    (r".*/attn/wv$", {1: ("model",)}),
+    (r".*/attn/wo$", {0: ("model",)}),
+    (r".*/mlp/(gate|up)$", {1: ("model",)}),
+    (r".*/mlp/down$", {0: ("model",)}),
+    (r".*/moe/(gate|up)$", {0: ("model",)}),      # expert-parallel
+    (r".*/moe/down$", {0: ("model",)}),
+    (r".*/moe/router$", {}),
+    (r"^embed$", {0: ("model",)}),
+    (r"^head$", {1: ("model",)}),
+]
+
+_SSM_TP_RULES: list[tuple[str, dict[int, tuple[str, ...]]]] = [
+    (r".*/mixer/in_proj$", {1: ("model",)}),
+    (r".*/mixer/out_proj$", {0: ("model",)}),
+    (r".*/mixer/(up|wq|wk|wv)$", {1: ("model",)}),
+    (r".*/mixer/down$", {0: ("model",)}),
+]
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh,
+               policy: ShardingPolicy, cfg: ModelConfig) -> P:
+    stacked = path.startswith("unit/")
+    eff_shape = shape[1:] if stacked else shape
+
+    rules = list(_RULES)
+    if policy.ssm_tp:
+        rules += _SSM_TP_RULES
+    rule = None
+    for pat, assignment in rules:
+        if re.match(pat, path):
+            rule = dict(assignment)
+            break
+    if rule is None:
+        rule = {}
+
+    # policy gates
+    if not policy.attn_tp and "/attn/" in path:
+        rule = {}
+    if not policy.mlp_tp and "/mlp/" in path:
+        rule = {}
+    if "/moe/" in path and "router" not in path:
+        if not (policy.moe_expert_parallel and
+                _ok(cfg.n_experts, mesh, "model")):
+            # fall back to tensor parallelism inside each expert
+            if path.endswith("down"):
+                rule = {1: ("model",)}       # (E, ff, d): shard ff
+            else:
+                rule = {2: ("model",)}       # (E, d, ff): shard ff
+    if path == "embed" and not policy.embed_vocab_shard:
+        rule = {}
+    if path == "head" and not policy.logits_vocab_shard:
+        rule = {}
+
+    spec = _spec(mesh, eff_shape, rule)
+    if stacked:
+        spec = P(None, *spec)
+    return spec
+
+
+def shard_params_tree(shapes_tree, mesh, policy: ShardingPolicy,
+                      cfg: ModelConfig):
+    """Map a pytree of ShapeDtypeStruct (or arrays) -> same tree with
+    NamedSharding attached (for arrays: device_put)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        spec = param_spec(path, leaf.shape, mesh, policy, cfg)
+        sh = NamedSharding(mesh, spec)
+        if isinstance(leaf, jax.ShapeDtypeStruct):
+            out.append(jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                            sharding=sh))
+        else:
+            out.append(jax.device_put(leaf, sh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------------------------
+# Activation / input rules
+# ------------------------------------------------------------------
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def tokens_spec(mesh, batch: int, policy: ShardingPolicy,
+                seq_shard: bool = False) -> P:
+    da = data_axes(mesh)
+    baxes = da if _ok(batch, mesh, *da) else ()
+    b = baxes if baxes else None
+    if seq_shard and policy.shard_seq_train:
+        return P(b, "model")
+    return P(b, None)
+
+
+def cache_spec(mesh, shape: tuple[int, ...], batch: int,
+               policy: ShardingPolicy, kind: str) -> P:
+    """KV cache (B, L, KV, hd) or SSM state (B, ...), with leading stack
+    dim.  Context parallelism: shard L on the data axes when the batch is
+    too small to occupy them."""
+    da = data_axes(mesh)
+    b_ok = _ok(batch, mesh, *da)
+    if kind == "kv":                          # (stack, B, L, KV, hd)
+        rule: dict[int, tuple[str, ...]] = {}
+        if b_ok:
+            rule[1] = da
+            seq_on_data = policy.decode_cache_seq == "always"
+        else:
+            seq_on_data = policy.decode_cache_seq in ("auto", "always")
+        if seq_on_data:
+            rule[2] = da if not b_ok else ()
+        rule[3] = ("model",)                  # kv heads if divisible
+        return _spec(mesh, shape, {k: v for k, v in rule.items() if v})
+    # ssm state: (stack, B, ...) — batch on data, rest replicated/model
+    rule = {1: da} if b_ok else {}
+    return _spec(mesh, shape, rule)

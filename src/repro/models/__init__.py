@@ -1,0 +1,5 @@
+"""Model zoo: composable blocks + top-level Model."""
+from repro.models.config import ModelConfig, dense_pattern, moe_pattern
+from repro.models.model import Model
+
+__all__ = ["ModelConfig", "Model", "dense_pattern", "moe_pattern"]

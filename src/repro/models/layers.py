@@ -1,0 +1,93 @@
+"""Shared neural building blocks: norms, RoPE, MLPs, time embeddings.
+
+Pure-functional: ``init_*`` returns a dict pytree, ``apply``-style
+functions take (params, inputs).  Initializers follow standard truncated
+normal / scaled schemes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / (d_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2, 2, (d_in, d_out)) *
+            std).astype(dtype)
+
+
+# ---------------- RMSNorm ----------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------- RoPE ----------------
+
+def rope_freqs(hd: int, theta: float, positions: Array) -> tuple[Array, Array]:
+    """cos/sin tables (..., hd/2) for given integer positions (...,)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, S, H, hd); cos/sin: (B?, S, hd/2) broadcastable."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(dt)
+
+
+# ---------------- MLP ----------------
+
+def mlp_init(key, d: int, d_ff: int, mlp_type: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"down": dense_init(ks[2], d_ff, d, dtype)}
+    if mlp_type == "swiglu":
+        p["gate"] = dense_init(ks[0], d, d_ff, dtype)
+        p["up"] = dense_init(ks[1], d, d_ff, dtype)
+    else:
+        p["up"] = dense_init(ks[1], d, d_ff, dtype)
+    return p
+
+
+def mlp(params: dict, x: Array, mlp_type: str) -> Array:
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    else:
+        h = jax.nn.gelu(x @ params["up"])
+    return h @ params["down"]
+
+
+# ---------------- Diffusion time embedding ----------------
+
+def time_embed_init(key, d: int, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, d, d, dtype),
+            "w2": dense_init(k2, d, d, dtype)}
+
+
+def time_embed(params: dict, t: Array, d: int) -> Array:
+    """Sinusoidal features of t in [0,1] -> MLP -> (B, d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) *
+                    (jnp.log(10_000.0) / max(half - 1, 1)))
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :] * 1000.0
+    feats = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if feats.shape[-1] < d:
+        feats = jnp.pad(feats, ((0, 0), (0, d - feats.shape[-1])))
+    h = jax.nn.silu(feats.astype(params["w1"].dtype) @ params["w1"])
+    return h @ params["w2"]

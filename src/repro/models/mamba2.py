@@ -1,0 +1,185 @@
+"""Mamba-2 block (SSD — state-space duality), TPU-shaped.
+
+Forward training pass uses the chunked SSD algorithm: the sequence is cut
+into chunks of length ``ssd_chunk``; within a chunk the recurrence is the
+MXU-friendly quadratic form, across chunks a cheap sequential scan carries
+the (H, N, P) state.  This is the pure-JAX oracle mirrored by
+``kernels/ssd_scan``.
+
+Decode is the exact single-step recurrence with a (H, N, P) state and a
+depthwise-conv ring buffer — O(1) per token, which is what makes
+``long_500k`` feasible for SSM/hybrid architectures.
+
+Weight layout (groups = 1):
+  in_proj : d -> [z (d_in), x (d_in), B (N), C (N), dt (H)]
+  conv    : depthwise width-w over the [x, B, C] channels
+  A_log, D, dt_bias : (H,)
+  out_proj: d_in -> d
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Array = jnp.ndarray
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    d, d_in, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.conv_width
+    conv_ch = d_in + 2 * N
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + H, dt),
+        "conv_w": (jax.random.truncated_normal(ks[1], -2, 2, (w, conv_ch)) *
+                   (1.0 / w ** 0.5)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(dt),
+        "norm": rmsnorm_init(d_in, dt),
+        "out_proj": dense_init(ks[2], d_in, d, dt),
+    }
+
+
+def _split(params, u, cfg: ModelConfig):
+    d_in, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = u @ params["in_proj"]
+    z, xBC, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    return z, xBC, dt_raw
+
+
+def _post(params, y, z, cfg: ModelConfig):
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+def _causal_conv(xBC: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv: xBC (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_scan_ref(x, dtv, A, Bm, Cm, chunk: int):
+    """Chunked SSD.  x: (B,S,H,P); dtv: (B,S,H); A: (H,) negative;
+    Bm, Cm: (B,S,N).  Returns y (B,S,H,P) and final state (B,H,N,P)."""
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(Bb, nc, L, H, P)
+    dtc = dtv.reshape(Bb, nc, L, H)
+    Bc = Bm.reshape(Bb, nc, L, N)
+    Cc = Cm.reshape(Bb, nc, L, N)
+
+    logdec = dtc * A                                   # (B,nc,L,H) <= 0
+    cs = jnp.cumsum(logdec, axis=2)                    # inclusive
+    # intra-chunk quadratic form: decay(j -> i) = exp(cs_i - cs_j), j <= i
+    gap = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    dec = jnp.where(tri[None, None, :, :, None], jnp.exp(gap), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)         # (B,nc,L,L)
+    M = cb[..., None] * dec * dtc[:, :, None, :, :]    # weight dt_j at col j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # chunk-final states: sum_j exp(cs_L - cs_j) dt_j B_j (x) x_j
+    dec_end = jnp.exp(cs[:, :, -1:, :] - cs)           # (B,nc,L,H)
+    sb = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                    dec_end * dtc, Bc, xc)             # (B,nc,H,N,P)
+    chunk_dec = jnp.exp(cs[:, :, -1, :])               # (B,nc,H)
+
+    def carry_fn(state, inp):
+        sb_c, cd_c = inp                               # (B,H,N,P), (B,H)
+        new = state * cd_c[..., None, None] + sb_c.astype(jnp.float32)
+        return new, state                              # emit state BEFORE
+
+    # the inter-chunk state recurrence runs in f32 regardless of the
+    # activation dtype (bf16 decay products underflow across chunks)
+    s0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    final, prev = jax.lax.scan(
+        carry_fn, s0, (sb.transpose(1, 0, 2, 3, 4),
+                       chunk_dec.astype(jnp.float32).transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)               # (B,nc,H,N,P)
+
+    # inter-chunk: y_i += C_i . (decay(start -> i) * prev_state)
+    dec_in = jnp.exp(cs)                               # (B,nc,L,H)
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", Cc, prev) * dec_in[..., None]
+    y = (y_intra + y_inter).reshape(Bb, nc * L, H, P)[:, :S]
+    return y.astype(x.dtype), final
+
+
+def apply(params: dict, u: Array, cfg: ModelConfig, *,
+          bidirectional: bool = False, use_kernel: bool = False) -> Array:
+    """Full-sequence forward.  u: (B, S, d)."""
+    B, S, d = u.shape
+    d_in, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    def one_direction(u):
+        z, xBC, dt_raw = _split(params, u, cfg)
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        x, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+        dtv = jax.nn.softplus(dt_raw + params["dt_bias"])
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        xh = x.reshape(B, S, H, P)
+        if use_kernel:
+            from repro.kernels.ssd_scan import ops as ssd_ops
+            y, _ = ssd_ops.ssd_scan(xh, dtv, A, Bm, Cm, chunk=cfg.ssd_chunk)
+        else:
+            y, _ = _ssd_scan_ref(xh, dtv, A, Bm, Cm, cfg.ssd_chunk)
+        y = y + xh * params["D"][:, None]
+        return _post(params, y.reshape(B, S, d_in).astype(u.dtype), z, cfg)
+
+    y = one_direction(u)
+    if bidirectional:
+        y = y + jnp.flip(one_direction(jnp.flip(u, axis=1)), axis=1)
+    return y
+
+
+# ---------------- decode ----------------
+
+def init_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d_in, N = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    conv_ch = d_in + 2 * N
+    return {
+        "state": jnp.zeros((batch, H, N, P), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def decode_step(params: dict, u: Array, cache: dict,
+                cfg: ModelConfig) -> tuple[Array, dict]:
+    """u: (B, 1, d) -> (y (B,1,d), cache)."""
+    B = u.shape[0]
+    d_in, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt_raw = _split(params, u[:, 0], cfg)
+    hist = jnp.concatenate([cache["conv"], xBC[:, None]], axis=1)
+    w = params["conv_w"]
+    xBC = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", hist[:, -w.shape[0]:], w) +
+        params["conv_b"])
+    x, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    dtv = jax.nn.softplus(dt_raw + params["dt_bias"])          # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = x.reshape(B, H, P)
+    dec = jnp.exp(dtv * A)                                     # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dtv, Bm, xh)
+    state = cache["state"] * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, state)
+    y = y + xh * params["D"][:, None]
+    out = _post(params, y.reshape(B, 1, d_in).astype(u.dtype),
+                z[:, None], cfg)
+    return out, {"state": state.astype(cache["state"].dtype),
+                 "conv": hist[:, 1:]}

@@ -1,0 +1,5 @@
+"""Serving substrate: generation engine + request batching."""
+from repro.serving.engine import EngineConfig, GenerationEngine
+from repro.serving.scheduler import BatchScheduler, Request
+
+__all__ = ["EngineConfig", "GenerationEngine", "BatchScheduler", "Request"]

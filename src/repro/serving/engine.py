@@ -1,0 +1,138 @@
+"""Generation engine: one object that binds (model params, sampler family)
+and serves batched requests.
+
+The engine exposes every sampler in the repo behind one call so the
+benchmarks and the serving launcher compare apples-to-apples:
+
+  method in {"dndm", "dndm2", "dndm_topk", "dndm_static",
+             "dndm_topk_static", "dndm_c", "dndm_c_topk",
+             "d3pm", "rdm", "rdm_k", "mask_predict"}
+
+For conditional requests, ``cond={"prefix_tokens": src}``: the model
+wrapper feeds [src | x_t] with bidirectional attention and returns target
+logits, so samplers stay prefix-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedules as sched_lib
+from repro.core import transition as trans_lib
+from repro.core.noise import NoiseDist
+from repro.core.samplers import (SamplerConfig, d3pm, dndm, dndm_continuous,
+                                 dndm_topk, mask_predict, rdm)
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    method: str = "dndm"
+    steps: int = 50                   # T for discrete methods / MP iters
+    schedule: str = "linear"
+    noise_kind: str = "absorbing"
+    beta: tuple[float, float] | None = None   # Beta approx of D_tau
+    nfe_budget: int = 0               # static variants
+    x0_mode: str = "sample"
+    temperature: float = 1.0
+    order: str = "iid"                # iid | l2r | r2l
+    shared_tau: bool = True           # one tau-set per batch (paper NFE)
+
+
+class GenerationEngine:
+    def __init__(self, model: Model, params, engine_cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = engine_cfg
+        v = model.cfg.vocab_size
+        if engine_cfg.noise_kind == "absorbing":
+            from repro.core.noise import absorbing
+            self.noise: NoiseDist = absorbing(v)
+        else:
+            from repro.core.noise import multinomial
+            self.noise = multinomial(v)
+        self.schedule = sched_lib.get(engine_cfg.schedule, engine_cfg.steps)
+        if engine_cfg.beta:
+            a, b = engine_cfg.beta
+            self.dist = trans_lib.beta_approx(engine_cfg.steps, a, b)
+            self.cdist = trans_lib.beta_continuous(a, b)
+        else:
+            self.dist = trans_lib.from_schedule(self.schedule)
+            self.cdist = trans_lib.beta_continuous(17, 4)
+        self.denoise_fn = model.denoise_fn(params)
+        self._jit_cache: dict = {}
+
+    # scan-based samplers have a statically known NFE, so the whole
+    # sampler is jitted once per (batch, N) and reused across requests —
+    # timing then measures execution, not retracing.
+    def _scan_sampler(self, batch: int, N: int):
+        c = self.cfg
+        scfg = SamplerConfig(x0_mode=c.x0_mode, temperature=c.temperature)
+        fn = self.denoise_fn
+        m = c.method
+        budget = c.nfe_budget or max(N // 2, 1)
+
+        def call(key, cond):
+            if m == "dndm_static":
+                return dndm.sample_static(
+                    key, fn, self.noise, self.dist, batch, N, budget,
+                    cond=cond, cfg=scfg, order=c.order,
+                    shared_tau=c.shared_tau).tokens
+            if m == "dndm_topk_static":
+                return dndm_topk.sample_static(
+                    key, fn, self.noise, self.dist, batch, N, budget,
+                    cond=cond, cfg=scfg, order=c.order,
+                    shared_tau=c.shared_tau).tokens
+            if m in ("dndm_c", "dndm_c_topk"):
+                return dndm_continuous.sample(
+                    key, fn, self.noise, self.cdist, batch, N, cond=cond,
+                    cfg=scfg, topk=(m == "dndm_c_topk"), order=c.order,
+                    shared_tau=c.shared_tau).tokens
+            if m == "d3pm":
+                return d3pm.sample(key, fn, self.noise, self.schedule,
+                                   batch, N, cond=cond, cfg=scfg).tokens
+            if m in ("rdm", "rdm_k"):
+                return rdm.sample(key, fn, self.noise, self.schedule,
+                                  batch, N, cond=cond, cfg=scfg,
+                                  topk=(m == "rdm_k")).tokens
+            if m == "mask_predict":
+                return mask_predict.sample(key, fn, self.noise, c.steps,
+                                           batch, N, cond=cond,
+                                           cfg=scfg).tokens
+            raise KeyError(m)
+
+        nfe = {"dndm_static": budget, "dndm_topk_static": budget,
+               "dndm_c": N, "dndm_c_topk": N, "d3pm": c.steps,
+               "rdm": c.steps, "rdm_k": c.steps,
+               "mask_predict": c.steps}[m]
+        return jax.jit(call), nfe
+
+    def generate(self, key, batch: int, N: int, cond: dict | None = None):
+        """Returns (SamplerOutput, wall_seconds)."""
+        c = self.cfg
+        scfg = SamplerConfig(x0_mode=c.x0_mode, temperature=c.temperature)
+        fn = self.denoise_fn
+        t0 = time.time()
+        m = c.method
+        if m in ("dndm", "dndm2"):
+            out = dndm.sample(key, fn, self.noise, self.dist, batch, N,
+                              cond=cond, cfg=scfg,
+                              version=(2 if m == "dndm2" else 1),
+                              order=c.order, shared_tau=c.shared_tau)
+        elif m == "dndm_topk":
+            out = dndm_topk.sample(key, fn, self.noise, self.dist, batch,
+                                   N, cond=cond, cfg=scfg, order=c.order,
+                                   shared_tau=c.shared_tau)
+        else:
+            ck = (m, batch, N)
+            if ck not in self._jit_cache:
+                self._jit_cache[ck] = self._scan_sampler(batch, N)
+            call, nfe = self._jit_cache[ck]
+            tokens = call(key, cond)
+            from repro.core.samplers.base import SamplerOutput
+            out = SamplerOutput(tokens=tokens, nfe=nfe, aux={})
+        jax.block_until_ready(out.tokens)
+        return out, time.time() - t0

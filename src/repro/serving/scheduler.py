@@ -1,0 +1,74 @@
+"""Request scheduler: batches async generation requests.
+
+Requests (each: target length + optional source prefix) are grouped into
+fixed-shape batches (pad to the engine's compiled (batch, N) buckets) so
+the jitted samplers are reused across requests — the serving-throughput
+path of deliverable (b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import GenerationEngine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    length: int
+    prefix: np.ndarray | None = None        # (P,) source tokens
+    result: np.ndarray | None = None
+    nfe: int = 0
+    wall: float = 0.0
+
+
+class BatchScheduler:
+    """Greedy fixed-bucket batching."""
+
+    def __init__(self, engine: GenerationEngine, max_batch: int = 8,
+                 bucket_len: int = 64, seed: int = 0):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.bucket_len = bucket_len
+        self.queue: list[Request] = []
+        self.done: dict[int, Request] = {}
+        self._rid = 0
+        self._key = jax.random.PRNGKey(seed)
+
+    def submit(self, length: int, prefix: np.ndarray | None = None) -> int:
+        self._rid += 1
+        self.queue.append(Request(self._rid, length, prefix))
+        return self._rid
+
+    def _bucket(self) -> list[Request]:
+        take = self.queue[: self.max_batch]
+        self.queue = self.queue[self.max_batch:]
+        return take
+
+    def run(self) -> dict[int, Request]:
+        """Drain the queue; returns completed requests by id."""
+        while self.queue:
+            batch = self._bucket()
+            B = len(batch)
+            N = self.bucket_len
+            cond = None
+            if batch[0].prefix is not None:
+                P = max(len(r.prefix) for r in batch)
+                pre = np.zeros((B, P), np.int32)
+                for i, r in enumerate(batch):
+                    pre[i, P - len(r.prefix):] = r.prefix
+                cond = {"prefix_tokens": jnp.asarray(pre)}
+            self._key, k = jax.random.split(self._key)
+            out, wall = self.engine.generate(k, B, N, cond=cond)
+            toks = np.asarray(jax.device_get(out.tokens))
+            for i, r in enumerate(batch):
+                r.result = toks[i, : r.length]
+                r.nfe = out.nfe
+                r.wall = wall
+                self.done[r.rid] = r
+        return self.done

@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, trainer, checkpoints."""
+from repro.training import checkpoint
+from repro.training.optim import AdamW, constant, warmup_cosine
+from repro.training.trainer import Trainer, init_state, make_train_step
+
+__all__ = ["checkpoint", "AdamW", "constant", "warmup_cosine", "Trainer",
+           "init_state", "make_train_step"]

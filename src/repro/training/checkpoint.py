@@ -1,0 +1,80 @@
+"""Checkpointing: flat-path .npz arrays + a JSON manifest (no pickle).
+
+Works for any dict/list/tuple pytree of jax/numpy arrays and python
+scalars.  Restores onto host numpy; the caller re-shards with device_put.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix="") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{_SEP}{k}" if prefix
+                                else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{_SEP}[{i}]" if prefix
+                                else f"[{i}]"))
+    else:
+        out[prefix] = np.asarray(jax.device_get(tree))
+    return out
+
+
+_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16",
+           "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                for k, v in flat.items()}
+    # numpy can't serialize ml_dtypes (bfloat16, fp8): widen to f32 on
+    # disk and restore the dtype from the manifest at load time.
+    flat = {k: (v.astype(np.float32) if str(v.dtype) not in _NATIVE else v)
+            for k, v in flat.items()}
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    with open((path[:-4] if path.endswith(".npz") else path) +
+              ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load(path: str) -> dict:
+    base = path[:-4] if path.endswith(".npz") else path
+    npz = np.load(base + ".npz", allow_pickle=False)
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    tree: dict = {}
+    for key in npz.files:
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            idx = int(p[1:-1]) if p.startswith("[") else p
+            node = node.setdefault(idx, {})
+        last = parts[-1]
+        idx = int(last[1:-1]) if last.startswith("[") else last
+        arr = npz[key]
+        want = manifest.get(key, {}).get("dtype")
+        if want and want != str(arr.dtype):
+            import ml_dtypes
+            arr = arr.astype(np.dtype(getattr(ml_dtypes, want, want)))
+        node[idx] = arr
+    return _lists(tree)
+
+
+def _lists(node):
+    """Convert {0:..,1:..} int-keyed dicts back into lists."""
+    if isinstance(node, dict):
+        node = {k: _lists(v) for k, v in node.items()}
+        if node and all(isinstance(k, int) for k in node):
+            return [node[i] for i in range(len(node))]
+    return node

@@ -1,0 +1,87 @@
+"""Optimizers and LR schedules in pure JAX (no optax dependency).
+
+AdamW with decoupled weight decay + global-norm clipping, and the usual
+warmup-cosine / warmup-linear schedules.  State is a plain pytree so it
+shards with the same rules as the parameters (optimizer sharding ==
+parameter sharding, ZeRO-1 style along whatever axes the params use).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+Schedule = Callable[[Array], Array]
+
+
+def warmup_cosine(peak: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0, 1)
+        cos = peak * (floor + (1 - floor) * 0.5 *
+                      (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Schedule
+    b1: float = 0.9
+    b2: float = 0.98
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+    def init(self, params) -> dict:
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return {"mu": zeros,
+                "nu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params) -> tuple[dict, dict, dict]:
+        """Returns (new_params, new_state, metrics)."""
+        step = state["step"] + 1
+        lr = self.schedule(step)
+
+        if self.clip_norm > 0:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.clip_norm /
+                                jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = jnp.zeros(())
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state["nu"], grads)
+        mu_hat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+
+        def upd(p, m, v):
+            u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + self.eps)
+            if p.ndim >= 2:                       # decay matrices only
+                u = u + self.weight_decay * p
+            return (p - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "step": step,
+                            }, {"lr": lr, "grad_norm": gnorm}
+
+    # convenience: (grads, state, params) -> (params, state, metrics)
+    def __call__(self, grads, state, params):
+        out = self.update(grads, state, params)
+        return out

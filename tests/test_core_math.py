@@ -1,0 +1,127 @@
+"""Posteriors, losses, forward-corruption invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import forward, losses, noise, schedules
+from repro.core.posterior import posterior
+
+K = 12
+
+
+def test_absorbing_posterior_probabilities(key):
+    nz = noise.absorbing(K)
+    x_t = jnp.asarray([[nz.mask_id, 3]])
+    x0p = jax.nn.one_hot(jnp.asarray([[5, 3]]), K)
+    p = posterior(x_t, x0p, jnp.asarray([[0.6]]), jnp.asarray([[0.4]]), nz)
+    p = np.asarray(p)
+    # masked token: stays masked w.p. (1-0.6)/(1-0.4) = 2/3, else reveals 5
+    assert abs(p[0, 0, nz.mask_id] - 2 / 3) < 1e-5
+    assert abs(p[0, 0, 5] - 1 / 3) < 1e-5
+    # clean token: deterministic copy
+    assert abs(p[0, 1, 3] - 1.0) < 1e-6
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-5)
+
+
+def test_multinomial_posterior_normalized(key):
+    nz = noise.multinomial(K)
+    x_t = jax.random.randint(key, (2, 5), 0, K)
+    logits = jax.random.normal(jax.random.fold_in(key, 1), (2, 5, K))
+    x0p = jax.nn.softmax(logits, -1)
+    p = posterior(x_t, x0p, jnp.full((2, 1), 0.7), jnp.full((2, 1), 0.5), nz)
+    np.testing.assert_allclose(np.asarray(p).sum(-1), 1.0, atol=1e-5)
+    assert np.all(np.asarray(p) >= 0)
+
+
+def test_posterior_chain_consistency(key):
+    """Ancestral sampling through q(x_{t-1}|x_t,x0) reproduces the
+    marginal q(x_{t-1}|x0) (Bayes-rule sanity for the D3PM baseline)."""
+    nz = noise.multinomial(K)
+    sch = schedules.linear(10)
+    t = 6
+    n = 40_000
+    x0 = jnp.zeros((n,), jnp.int32)
+    k1, k2 = jax.random.split(key)
+    alphas = jnp.asarray(sch.alphas, jnp.float32)
+    x_t = forward.sample_xt(k1, x0, alphas[t], nz)
+    x0p = jax.nn.one_hot(jnp.broadcast_to(x0[:, None], (n, 1)), K)
+    p = posterior(x_t[:, None], x0p, jnp.full((n, 1), sch.alphas[t - 1],
+                  jnp.float32), jnp.full((n, 1), sch.alphas[t],
+                  jnp.float32), nz)
+    x_tm1 = jax.random.categorical(k2, jnp.log(p + 1e-30), axis=-1)[:, 0]
+    frac0 = float((x_tm1 == 0).mean())
+    expect = sch.alphas[t - 1] + (1 - sch.alphas[t - 1]) / K
+    assert abs(frac0 - expect) < 0.01
+
+
+@pytest.mark.parametrize("kind", ["absorbing", "multinomial"])
+@pytest.mark.parametrize("continuous", [False, True])
+def test_reparam_loss_grad_finite(kind, continuous, key):
+    sch = schedules.cosine(20)
+    nz = noise.get(kind, K)
+    x0 = jax.random.randint(key, (4, 8), 0, K - 1)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, K)) * 0.1
+
+    def apply_fn(params, x_t, t, cond):
+        return jax.nn.one_hot(x_t, K) @ params
+
+    def f(w):
+        l, m = losses.reparam_ce_loss(key, apply_fn, w, x0, sch, nz,
+                                      continuous_time=continuous)
+        return l
+    l, g = jax.value_and_grad(f)(w)
+    assert np.isfinite(float(l)) and np.isfinite(np.asarray(g)).all()
+
+
+def test_elbo_decreases_for_better_model(key):
+    """ELBO loss is lower for a model that predicts x0 well."""
+    sch = schedules.linear(20)
+    nz = noise.absorbing(K)
+    x0 = jax.random.randint(key, (8, 16), 0, K - 1)
+
+    def sharp(params, x_t, t, cond):
+        return jax.nn.one_hot(x0, K) * params
+
+    l_good, _ = losses.elbo_loss(key, sharp, 8.0, x0, sch, nz)
+    l_flat, _ = losses.elbo_loss(key, sharp, 0.0, x0, sch, nz)
+    assert float(l_good) < float(l_flat)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 30))
+@settings(max_examples=10, deadline=None)
+def test_corruption_marginal_property(seed, T):
+    """x_t == x0 frequency ~ alpha_t + (1-alpha_t)/K for multinomial."""
+    key = jax.random.PRNGKey(seed)
+    sch = schedules.linear(T)
+    nz = noise.multinomial(K)
+    x0 = jnp.zeros((5000,), jnp.int32)
+    t = jnp.full((5000,), T // 2 + 1)
+    x_t, _, alpha = forward.corrupt_for_training(key, x0, sch, nz, t=t)
+    frac = float((x_t == 0).mean())
+    expect = float(alpha[0] + (1 - alpha[0]) / K)
+    assert abs(frac - expect) < 0.04
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    from repro.training import checkpoint
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": [jnp.zeros((2,)), jnp.full((1,), 7.0)]}}
+    checkpoint.save(str(tmp_path / "ck"), tree)
+    back = checkpoint.load(str(tmp_path / "ck"))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_adamw_reduces_quadratic():
+    from repro.training.optim import AdamW, constant
+    opt = AdamW(schedule=constant(0.1), weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.05

@@ -1,0 +1,118 @@
+"""Sharding rules + analysis plumbing (no 512-device requirement: rules
+are pure functions of mesh metadata; we use small host meshes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.configs as C
+from repro.launch import analysis
+from repro.launch.sharding import ShardingPolicy, param_spec, cache_spec
+
+
+class FakeMesh:
+    """Mesh metadata stand-in (axis sizes only; rules never need devices)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+POL = ShardingPolicy()
+CFG = C.get("mixtral-8x7b")
+
+
+def test_param_rules_tp():
+    assert param_spec("unit/b0/attn/wq", (32, 4096, 4096), MESH, POL,
+                      CFG) == P(None, None, "model")
+    assert param_spec("unit/b0/attn/wo", (32, 4096, 4096), MESH, POL,
+                      CFG) == P(None, "model")
+    assert param_spec("unit/b0/mlp/down", (32, 14336, 4096), MESH, POL,
+                      CFG) == P(None, "model")
+    assert param_spec("embed", (32000, 4096), MESH, POL, CFG) == P("model")
+    assert param_spec("head", (4096, 32000), MESH, POL, CFG) == \
+        P(None, "model")
+    assert param_spec("ln_f/scale", (4096,), MESH, POL, CFG) == P()
+
+
+def test_param_rules_moe_fallback():
+    # mixtral: 8 experts, model=16 => not divisible => ff tensor parallel
+    assert param_spec("unit/b0/moe/up", (32, 8, 4096, 14336), MESH, POL,
+                      CFG) == P(None, None, None, "model")
+    assert param_spec("unit/b0/moe/down", (32, 8, 14336, 4096), MESH, POL,
+                      CFG) == P(None, None, "model")
+    # llama4: 128 experts => expert-parallel
+    cfg4 = C.get("llama4-maverick-400b-a17b")
+    assert param_spec("unit/b0/moe/up", (48, 128, 5120, 8192), MESH, POL,
+                      cfg4) == P(None, "model")
+
+
+def _norm(spec):
+    """Normalize PartitionSpec entries to tuples, drop trailing Nones."""
+    out = []
+    for e in spec:
+        out.append(tuple(e) if isinstance(e, (tuple, list))
+                   else ((e,) if e else None))
+    while out and out[-1] is None:
+        out.pop()
+    return tuple(out)
+
+
+def test_param_rules_nondivisible_replicates():
+    # a dim not divisible by the model axis must replicate
+    spec = param_spec("unit/b0/attn/wq", (30, 3072, 100), MESH, POL, CFG)
+    assert _norm(spec) == ()
+
+
+def test_cache_specs():
+    # decode_32k: B=128 shardable on data
+    spec = cache_spec(MESH, (32, 128, 32768, 8, 128), 128, POL, "kv")
+    assert _norm(spec)[1] == ("data",)
+    # long_500k: B=1 -> context parallelism on seq
+    spec = cache_spec(MESH, (9, 1, 524288, 32, 80), 1, POL, "kv")
+    assert _norm(spec)[2] == ("data",)
+    # multi-pod batch axes
+    spec = cache_spec(MESH3, (32, 128, 32768, 8, 128), 128, POL, "kv")
+    assert _norm(spec)[1] == ("pod", "data")
+
+
+def test_collective_parser():
+    hlo = """
+  %all-reduce.5 = f32[16,512,1024]{2,1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %fusion = bf16[8,8]{1,0} fusion(%all-reduce.5)
+  %ag = bf16[4,1024]{1,0} all-gather(%y), dimensions={0}
+  %cp = u32[] collective-permute(%z)
+  %not-a-coll = f32[2,2]{1,0} add(%a, %b)
+"""
+    out = analysis.collective_bytes(hlo)
+    assert out["all-reduce"] == 16 * 512 * 1024 * 4
+    assert out["all-gather"] == 4 * 1024 * 2
+    assert out["count"] == 3
+
+
+def test_roofline_terms():
+    cost = {"flops": 197e12, "bytes accessed": 819e9}
+    coll = {"all-reduce": int(100e9), "count": 1}
+    t = analysis.roofline(cost, coll, 256, model_flops=197e12 * 256)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 1.0) < 1e-9
+    assert abs(t.collective_s - 1.0) < 1e-9
+    assert abs(t.useful_ratio - 1.0) < 1e-9
+    assert t.dominant in ("compute", "memory", "collective")
+
+
+def test_scan_correction_only_for_slstm():
+    xl = C.get("xlstm-350m")
+    assert analysis.scan_correction(xl, 256, 4096, "train") > 0
+    dense = C.get("tinyllama-1.1b")
+    assert analysis.scan_correction(dense, 256, 4096, "train") == 0.0
+
+
+def test_mesh_helpers():
+    from repro.launch.mesh import axis_size, batch_axes
+    m = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert batch_axes(m) == ("pod", "data")
+    assert axis_size(m, "pod", "data") == 32

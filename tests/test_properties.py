@@ -1,0 +1,128 @@
+"""Hypothesis property tests on system invariants (beyond the targeted
+property tests embedded in the other files)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import noise, schedules, transition
+from repro.core.samplers.dndm import quantile_grid
+from repro.training import checkpoint
+
+
+@given(T=st.integers(3, 300), K=st.integers(1, 64))
+@settings(max_examples=25, deadline=None)
+def test_quantile_grid_properties(T, K):
+    """Grid is sorted, within {1..T}, ends at (or before) T, and covers
+    the full transition mass (last grid point >= every tau quantile)."""
+    dist = transition.from_schedule(schedules.cosine(T))
+    K = min(K, T)
+    grid = quantile_grid(dist, K)
+    assert len(grid) == K
+    assert np.all(np.diff(grid) >= 0)
+    assert 1 <= grid[0] and grid[-1] <= T
+    cdf = np.cumsum(dist.probs)
+    assert cdf[grid[-1] - 1] >= 1.0 - 1e-9
+
+
+@given(seed=st.integers(0, 10_000), batch=st.integers(1, 6),
+       N=st.integers(1, 40))
+@settings(max_examples=20, deadline=None)
+def test_shared_tau_is_constant_across_batch(seed, batch, N):
+    dist = transition.from_schedule(schedules.linear(30))
+    tau = transition.sample_transition_times(
+        jax.random.PRNGKey(seed), dist, batch, N, shared=True)
+    assert (np.asarray(tau) == np.asarray(tau)[0]).all()
+    # iid draws must (almost surely) differ for a reasonable size
+    if batch >= 4 and N >= 20:
+        tau2 = transition.sample_transition_times(
+            jax.random.PRNGKey(seed), dist, batch, N, shared=False)
+        assert not (np.asarray(tau2) == np.asarray(tau2)[0]).all()
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_posterior_rows_normalized(seed):
+    from repro.core.posterior import posterior
+    key = jax.random.PRNGKey(seed)
+    K = 9
+    for kind in ("absorbing", "multinomial"):
+        nz = noise.get(kind, K)
+        x_t = jax.random.randint(key, (2, 7), 0, K)
+        logits = jax.random.normal(jax.random.fold_in(key, 1), (2, 7, K))
+        x0p = jax.nn.softmax(logits, -1)
+        a = jax.random.uniform(jax.random.fold_in(key, 2), (2, 1),
+                               minval=0.3, maxval=0.9)
+        p = posterior(x_t, x0p, a, a * 0.5, nz)
+        arr = np.asarray(p)
+        np.testing.assert_allclose(arr.sum(-1), 1.0, atol=1e-4)
+        assert (arr >= -1e-6).all()
+
+
+@given(st.lists(st.tuples(st.integers(1, 4), st.integers(1, 5)),
+                min_size=1, max_size=4),
+       st.sampled_from(["float32", "bfloat16", "int32"]))
+@settings(max_examples=15, deadline=None)
+def test_checkpoint_roundtrip_random_trees(shapes, dtype):
+    import tempfile
+    tree = {f"k{i}": jnp.ones(s, jnp.dtype(dtype)) * i
+            for i, s in enumerate(shapes)}
+    tree["nested"] = {"list": [jnp.zeros((2,)),
+                               {"deep": jnp.full((1, 2), 3.5)}]}
+    path = tempfile.mkdtemp() + "/t"
+    checkpoint.save(path, tree)
+    back = checkpoint.load(path)
+    la, lb = jax.tree.leaves(tree), jax.tree.leaves(back)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert str(a.dtype) == str(np.asarray(b).dtype)
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_microbatched_step_shapes_and_finiteness(key):
+    from repro.core import schedules as sch_lib
+    from repro.models import Model, ModelConfig
+    from repro.training import AdamW, constant, init_state
+    from repro.training.trainer import make_train_step
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=30,
+                      block_pattern=("attn",), bidirectional=True)
+    model = Model(cfg)
+    sch = sch_lib.linear(10)
+    nz = noise.absorbing(30)
+    opt = AdamW(schedule=constant(1e-3))
+    state = init_state(model, opt, key)
+    batch = {"x0": jax.random.randint(jax.random.fold_in(key, 1),
+                                      (8, 12), 0, 29)}
+    for k in (1, 2, 4):
+        step = jax.jit(make_train_step(model, sch, nz, opt,
+                                       microbatches=k))
+        s, m = step(state, batch, jax.random.fold_in(key, 2))
+        assert np.isfinite(float(m["loss"])), k
+        assert int(s["step"]) == 1
+
+
+@given(st.integers(0, 5_000), st.integers(2, 27))
+@settings(max_examples=10, deadline=None)
+def test_translate_is_invertible(seed, vocab):
+    """The cipher translation is a bijection on token sequences."""
+    from repro.data.synthetic import TranslationTask, translate
+    task = TranslationTask(vocab, seed=seed)
+    rng = np.random.default_rng(seed)
+    src, tgt = task.sample_pairs(rng, 3, 20)
+    inv = np.argsort(task.perm)
+    np.testing.assert_array_equal(inv[tgt], src)
+
+
+def test_bleu_sanity():
+    from repro.data.synthetic import bleu
+    a = np.arange(20)[None]
+    assert bleu(a, a) > 99.0
+    b = a + 100                     # disjoint tokens: no n-gram overlap
+    assert bleu(b, a) < 1.0
+    # reordering the same tokens keeps unigrams (beats disjoint) but the
+    # geometric mean over 4-grams stays near zero
+    c = a[:, ::-1]
+    assert bleu(b, a) < bleu(c, a) < 99.0

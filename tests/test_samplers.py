@@ -1,0 +1,148 @@
+"""Sampler semantics: NFE laws, oracle recovery, equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import noise, schedules, transition
+from repro.core.samplers import (SamplerConfig, d3pm, dndm, dndm_continuous,
+                                 dndm_topk, mask_predict, rdm)
+
+K, B, N, T = 24, 4, 16, 40
+ARGMAX = SamplerConfig(x0_mode="argmax")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    sch = schedules.linear(T)
+    dist = transition.from_schedule(sch)
+    target = jax.random.randint(jax.random.PRNGKey(7), (B, N), 0, K - 1)
+
+    def oracle(x_t, t, cond):
+        return jax.nn.one_hot(target, K) * 25.0
+
+    return sch, dist, target, oracle
+
+
+@pytest.mark.parametrize("kind", ["absorbing", "multinomial"])
+def test_dndm_oracle_recovery(setup, kind, key):
+    sch, dist, target, oracle = setup
+    nz = noise.get(kind, K)
+    out = dndm.sample(key, oracle, nz, dist, B, N, cfg=ARGMAX)
+    assert (out.tokens == target).all()
+    assert out.nfe <= min(B * N, T)            # union over batch <= T
+    # per-row NFE law
+    per_row = np.asarray(transition.nfe_of(out.aux["tau"], T))
+    assert np.all(per_row <= min(N, T))
+
+
+def test_dndm_scan_equals_host_loop(setup, key):
+    """The lax.cond-gated scan is the same algorithm as the host loop."""
+    sch, dist, target, oracle = setup
+    nz = noise.absorbing(K)
+    a = dndm.sample(key, oracle, nz, dist, B, N, cfg=ARGMAX)
+    b = dndm.sample_scan(key, oracle, nz, dist, B, N, cfg=ARGMAX)
+    assert a.nfe == b.nfe
+    assert (a.tokens == b.tokens).all()
+
+
+def test_dndm_static_budget(setup, key):
+    sch, dist, target, oracle = setup
+    nz = noise.absorbing(K)
+    for budget in (4, 10, 25):
+        out = dndm.sample_static(key, oracle, nz, dist, B, N,
+                                 nfe_budget=budget, cfg=ARGMAX)
+        assert out.nfe == budget
+        assert (out.tokens == target).all()
+
+
+def test_dndm_absorbing_reveals_everything(setup, key):
+    """No [MASK] left after a full reverse pass (Alg 1 invariant)."""
+    sch, dist, target, oracle = setup
+    nz = noise.absorbing(K)
+    for version in (1, 2):
+        out = dndm.sample(key, oracle, nz, dist, B, N, cfg=ARGMAX,
+                          version=version)
+        assert not (out.tokens == nz.mask_id).any()
+
+
+def test_dndm_topk_nfe_matches_dndm(setup, key):
+    sch, dist, target, oracle = setup
+    nz = noise.absorbing(K)
+    a = dndm.sample(key, oracle, nz, dist, B, N, cfg=ARGMAX)
+    b = dndm_topk.sample(key, oracle, nz, dist, B, N, cfg=ARGMAX)
+    assert a.nfe == b.nfe                      # same skip set (App. E)
+    assert (b.tokens == target).all()
+
+
+def test_dndm_continuous_nfe_is_N(setup, key):
+    sch, dist, target, oracle = setup
+    nz = noise.multinomial(K)
+    cdist = transition.beta_continuous(17, 4)
+    for topk in (False, True):
+        out = dndm_continuous.sample(key, oracle, nz, cdist, B, N,
+                                     cfg=ARGMAX, topk=topk)
+        assert out.nfe == N                    # Remark 3.7 / Thm D.1 limit
+        assert (out.tokens == target).all()
+
+
+def test_baselines_nfe_is_T(setup, key):
+    sch, dist, target, oracle = setup
+    nz = noise.absorbing(K)
+    assert d3pm.sample(key, oracle, nz, sch, B, N, cfg=ARGMAX).nfe == T
+    assert rdm.sample(key, oracle, nz, sch, B, N, cfg=ARGMAX).nfe == T
+    out = mask_predict.sample(key, oracle, nz, 10, B, N, cfg=ARGMAX)
+    assert out.nfe == 10 and (out.tokens == target).all()
+
+
+def test_d3pm_oracle_recovery(setup, key):
+    sch, dist, target, oracle = setup
+    for kind in ("absorbing", "multinomial"):
+        nz = noise.get(kind, K)
+        out = d3pm.sample(key, oracle, nz, sch, B, N, cfg=ARGMAX)
+        assert (out.tokens == target).all(), kind
+
+
+def test_rdm_oracle_recovery(setup, key):
+    sch, dist, target, oracle = setup
+    nz = noise.multinomial(K)
+    for topk in (False, True):
+        out = rdm.sample(key, oracle, nz, sch, B, N, cfg=ARGMAX, topk=topk)
+        assert (out.tokens == target).all()
+
+
+def test_dndm_reveal_order_l2r(setup, key):
+    """l2r: leftmost tokens are revealed first in the reverse process."""
+    sch, dist, target, oracle = setup
+    nz = noise.absorbing(K)
+    out = dndm.sample(key, oracle, nz, dist, B, N, cfg=SamplerConfig(
+        x0_mode="argmax", trace=True), order="l2r")
+    # in the trace, once position i is clean, all j < i are clean too
+    for state in out.aux["trace"]:
+        clean = state != nz.mask_id
+        for b in range(B):
+            idx = np.where(~clean[b])[0]
+            if len(idx):
+                assert clean[b, :idx[0]].all()
+
+
+def test_mean_nfe_matches_thm_d1(setup):
+    """Average per-row NFE over many draws ~ E|T| from Theorem D.1."""
+    sch, dist, target, oracle = setup
+    want = dist.expected_nfe(N)
+    tau = transition.sample_transition_times(
+        jax.random.PRNGKey(3), dist, 2000, N)
+    got = float(np.mean(np.asarray(transition.nfe_of(tau, T))))
+    assert abs(got - want) / want < 0.05
+
+
+def test_ddim_oracle_recovery_and_stride(setup, key):
+    """Discrete DDIM baseline: strided NFE = T/stride; oracle recovery."""
+    from repro.core.samplers import ddim
+    sch, dist, target, oracle = setup
+    nz = noise.multinomial(K)
+    for stride in (1, 2, 5):
+        out = ddim.sample(key, oracle, nz, sch, B, N, stride=stride,
+                          cfg=ARGMAX)
+        assert out.nfe == -(-T // stride)
+        assert (out.tokens == target).all(), stride

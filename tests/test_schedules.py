@@ -1,0 +1,124 @@
+"""Schedules + transition-time laws: Theorems 3.1, 3.6, D.1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import forward, noise, schedules, transition
+
+
+@pytest.mark.parametrize("name", ["linear", "cosine", "cosine_sq"])
+@pytest.mark.parametrize("T", [5, 50, 1000])
+def test_schedule_monotone(name, T):
+    sch = schedules.get(name, T)
+    a = sch.alphas
+    assert a[0] == 1.0 and a[-1] == 0.0
+    assert np.all(np.diff(a) <= 1e-12)
+    p = sch.transition_probs()
+    assert np.all(p >= 0) and abs(p.sum() - 1) < 1e-9
+
+
+@given(T=st.integers(2, 200))
+@settings(max_examples=20, deadline=None)
+def test_schedule_monotone_property(T):
+    for name in ("linear", "cosine", "cosine_sq"):
+        sch = schedules.get(name, T)
+        assert np.all(np.diff(sch.alphas) <= 1e-12)
+        assert abs(sch.transition_probs().sum() - 1) < 1e-9
+
+
+def test_thm_3_6_transition_law(key):
+    """Empirical tau frequencies match alpha_{t-1} - alpha_t."""
+    T = 20
+    sch = schedules.cosine(T)
+    dist = transition.from_schedule(sch)
+    tau = dist.sample(key, (200_000,))
+    counts = np.bincount(np.asarray(tau), minlength=T + 1)[1:]
+    emp = counts / counts.sum()
+    np.testing.assert_allclose(emp, dist.probs, atol=5e-3)
+
+
+def test_thm_3_1_marginal_equivalence(key):
+    """Non-Markov (eq. 6) and Markov (eq. 1) trajectories share marginals."""
+    T, K, n = 10, 8, 30_000
+    sch = schedules.linear(T)
+    nz = noise.multinomial(K)
+    x0 = jnp.zeros((n,), jnp.int32)            # fixed x0 = 0
+    k1, k2 = jax.random.split(key)
+    traj_nm = np.asarray(forward.non_markov_trajectory(k1, x0, sch, nz))
+    traj_m = np.asarray(forward.markov_trajectory(k2, x0, sch, nz))
+    for t in (3, 7, 10):
+        # P(x_t == x0) must match alpha_t + (1-alpha_t)/K on both
+        expect = sch.alphas[t] + (1 - sch.alphas[t]) / K
+        for traj in (traj_nm, traj_m):
+            frac = (traj[t] == 0).mean()
+            assert abs(frac - expect) < 0.01, (t, frac, expect)
+        # full marginal histograms agree between the two processes
+        h_nm = np.bincount(traj_nm[t], minlength=K) / n
+        h_m = np.bincount(traj_m[t], minlength=K) / n
+        np.testing.assert_allclose(h_nm, h_m, atol=0.015)
+
+
+def test_non_markov_single_transition(key):
+    """Eq. (7): each token flips at most once along a DNDM trajectory."""
+    T, K = 15, 12
+    sch = schedules.cosine_sq(T)
+    nz = noise.multinomial(K)
+    x0 = jax.random.randint(key, (500,), 0, K)
+    traj = np.asarray(forward.non_markov_trajectory(
+        jax.random.fold_in(key, 1), x0, sch, nz))
+    x0n = np.asarray(x0)
+    for n in range(traj.shape[1]):
+        clean = traj[:, n] == x0n[n]
+        # once it leaves x0 it never returns (fixed shared noise w)
+        left = np.where(~clean)[0]
+        if len(left):
+            first = left[0]
+            assert np.all(traj[first:, n] == traj[first, n])
+
+
+def test_thm_d1_expected_nfe(key):
+    T, N = 50, 16
+    for mk in (lambda: transition.from_schedule(schedules.linear(T)),
+               lambda: transition.beta_approx(T, 5.0, 3.0)):
+        dist = mk()
+        want = dist.expected_nfe(N)
+        got = transition.expected_nfe_mc(dist, N, 4000, key)
+        assert abs(got - want) / want < 0.03, (dist.name, got, want)
+        assert 1 <= want <= min(N, T)
+
+
+def test_thm_d1_uniform_lower_bound():
+    """C >= (1-1/T)^N with equality iff uniform."""
+    T, N = 40, 10
+    uni = transition.from_schedule(schedules.linear(T))
+    c_uni = 1 - uni.expected_nfe(N) / T
+    assert abs(c_uni - (1 - 1 / T) ** N) < 1e-9
+    beta = transition.beta_approx(T, 8.0, 2.0)
+    c_beta = 1 - beta.expected_nfe(N) / T
+    assert c_beta >= c_uni - 1e-9
+
+
+@given(a=st.floats(0.5, 20), b=st.floats(0.5, 20), T=st.integers(5, 100))
+@settings(max_examples=15, deadline=None)
+def test_beta_approx_valid(a, b, T):
+    dist = transition.beta_approx(T, a, b)
+    assert abs(dist.probs.sum() - 1) < 1e-9
+    assert np.all(dist.probs >= 0)
+
+
+def test_ordered_transition_times(key):
+    dist = transition.from_schedule(schedules.linear(30))
+    for order, check in (("l2r", lambda t: np.all(np.diff(t, axis=1) <= 0)),
+                         ("r2l", lambda t: np.all(np.diff(t, axis=1) >= 0))):
+        tau = np.asarray(transition.sample_transition_times(
+            key, dist, 8, 12, order=order))
+        assert check(tau), order
+
+
+def test_nfe_of_counts_unique(key):
+    dist = transition.from_schedule(schedules.linear(10))
+    tau = jnp.asarray([[1, 1, 2, 9], [3, 3, 3, 3]])
+    nfe = np.asarray(transition.nfe_of(tau, 10))
+    assert nfe.tolist() == [3, 1]
