@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import noise as noise_lib, schedules
+from repro.core.samplers import registry
 from repro.data import DataConfig, DataPipeline
 from repro.data.synthetic import bleu
 from repro.models import Model, ModelConfig
@@ -73,6 +74,13 @@ def translation_model():
 
 def engine(model, params, **kw) -> GenerationEngine:
     return GenerationEngine(model, params, EngineConfig(**kw))
+
+
+def available_methods(noise_kind: str | None = None) -> tuple[str, ...]:
+    """Engine methods from the sampler registry — benchmark grids iterate
+    this (optionally filtered by noise support) instead of hand-written
+    method lists."""
+    return registry.names(noise_kind)
 
 
 def quality_ll(pipe, tokens) -> float:

@@ -34,6 +34,10 @@ MODULES = [
 
 def main() -> None:
     only = sys.argv[1:] or MODULES
+    from benchmarks.common import available_methods
+    # stderr: stdout stays a machine-readable CSV stream
+    print(f"# engine methods: {', '.join(available_methods())}",
+          file=sys.stderr)
     print("name,us_per_call,derived")
     for name in MODULES:
         if name not in only:

@@ -13,6 +13,7 @@ import jax
 import numpy as np
 
 from repro.core import noise, schedules
+from repro.core.samplers import registry
 from repro.data import CharTokenizer, DataConfig, DataPipeline
 from repro.models import Model, ModelConfig
 from repro.serving import EngineConfig, GenerationEngine
@@ -49,11 +50,12 @@ def main():
     tok = CharTokenizer()
     key = jax.random.PRNGKey(0)
     print(f"{'method':<16} {'NFE':>5} {'wall_s':>8} {'ppl_proxy':>10}")
-    for method in ("d3pm", "rdm_k", "dndm", "dndm_topk", "dndm_static",
-                   "dndm_c"):
+    # every registered sampler that can run on the absorbing vocab —
+    # new registry entries show up here with zero edits
+    for method in registry.names(noise_kind="absorbing"):
         eng = GenerationEngine(model, state["params"], EngineConfig(
             method=method, steps=args.T, nfe_budget=12,
-            beta=(17, 4) if method == "dndm_c" else None))
+            beta=(17, 4) if method.startswith("dndm_c") else None))
         out, wall = eng.generate(key, 8, args.seq)
         out, wall = eng.generate(key, 8, args.seq)   # warm timing
         ll = pipe.lang.log_likelihood(np.asarray(out.tokens))

@@ -1,0 +1,114 @@
+"""Decode-update backend layer.
+
+Every sampler's hot path decodes x0_hat from the (B, N, K) denoiser
+logits and folds it into the running token buffer.  This module is the
+single place where that happens, behind three interchangeable backends:
+
+  * ``"pallas"``    — the streaming kernel in ``kernels/dndm_update``
+                      compiled to Mosaic; never materializes the
+                      log-softmax / argmax intermediate in HBM.
+  * ``"interpret"`` — the same kernel under the Pallas interpreter
+                      (CPU/GPU debugging; slow, bit-identical tokens).
+  * ``"reference"`` — pure jnp (fast on CPU, the correctness oracle).
+
+``backend="auto"`` (the default everywhere) resolves to ``"pallas"`` on
+TPU and ``"reference"`` elsewhere; set ``REPRO_DECODE_BACKEND`` to force
+a specific backend process-wide.
+
+Decode modes follow ``SamplerConfig.x0_mode``: ``"argmax"`` picks the
+highest adjusted logit; ``"sample"`` draws categorically via the
+Gumbel-max trick (argmax of logits/temp + mask + Gumbel(0,1) noise), so
+all three backends produce bitwise-identical tokens under a fixed key.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dndm_update import ops as _ops
+from repro.kernels.dndm_update import ref as _ref
+
+Array = jnp.ndarray
+
+BACKENDS = ("pallas", "interpret", "reference")
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_DECODE_BACKEND", "").strip()
+    backend = env or ("pallas" if jax.default_backend() == "tpu"
+                      else "reference")
+    if backend not in BACKENDS:
+        raise ValueError(f"REPRO_DECODE_BACKEND={env!r}; pick one of "
+                         f"{BACKENDS}")
+    return backend
+
+
+def resolve_backend(backend: str | None = "auto") -> str:
+    if backend in (None, "auto"):
+        return default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown decode backend {backend!r}; pick one of "
+                         f"{BACKENDS} or 'auto'")
+    return backend
+
+
+def _gumbel(key: jax.Array, shape, x0_mode: str) -> Array | None:
+    if x0_mode == "argmax":
+        return None
+    if x0_mode != "sample":
+        raise ValueError(f"unknown x0_mode {x0_mode!r}")
+    return jax.random.gumbel(key, shape, jnp.float32)
+
+
+def fused_update(key: jax.Array, logits: Array, x: Array, tau: Array, t,
+                 noise, cfg, *, version: int = 1, backend: str = "auto",
+                 block_n: int = 256, block_v: int = 1024) -> Array:
+    """Decode x0_hat and apply the eq. (9) token update in one pass.
+
+    ``x_{t-1} = where(tau == t, x0_hat, x_t)`` (``tau >= t`` for
+    Algorithm 3 / version=2).  Returns the updated tokens (B, N) int32.
+    All backends agree bitwise on the result for a fixed ``key``.
+
+    Memory note: argmax mode is the fully streaming path.  Sample mode
+    materializes a (B, N, K) f32 Gumbel tensor so that every backend sees
+    identical noise (the bitwise-parity contract); replacing it with
+    in-kernel per-tile counter-based PRNG would recover the streaming
+    property at the cost of backend-portable determinism.
+    """
+    backend = resolve_backend(backend)
+    mask = noise.logit_mask(jnp.float32)
+    gumbel = _gumbel(key, logits.shape, cfg.x0_mode)
+    t = jnp.asarray(t, jnp.int32)
+    if backend == "reference":
+        out = _ref.dndm_update_ref(logits, x, tau.astype(jnp.int32),
+                                   t.reshape(1), version=version, mask=mask,
+                                   temperature=cfg.temperature,
+                                   gumbel=gumbel)
+        return out.astype(jnp.int32)
+    return _ops.dndm_update(logits, x, tau, t, mask=mask, gumbel=gumbel,
+                            version=version, temperature=cfg.temperature,
+                            block_n=block_n, block_v=block_v,
+                            interpret=(backend == "interpret"))
+
+
+def decode_tokens(key: jax.Array, logits: Array, noise,
+                  cfg) -> tuple[Array, Array]:
+    """Pick x0_hat from logits; returns (tokens (B,N), scores (B,N)).
+
+    Scores are the per-token log-probabilities of the chosen token —
+    exactly the quantity RDM-k / DNDM-k rank on (paper App. E).  Tokens
+    come from the same adjusted-logit argmax / Gumbel-max the fused
+    kernel computes, so they agree with ``fused_update`` bitwise.  No
+    backend choice here: the score head is reference-only until the
+    streaming kernel emits (token, score) pairs.
+    """
+    mask = noise.logit_mask(jnp.float32)
+    a = _ref.adjust_logits(logits, mask=mask, temperature=cfg.temperature)
+    gumbel = _gumbel(key, logits.shape, cfg.x0_mode)
+    sel = a if gumbel is None else a + gumbel
+    tok = sel.argmax(-1).astype(jnp.int32)
+    logp = jax.nn.log_softmax(a, axis=-1)
+    score = jnp.take_along_axis(logp, tok[..., None], axis=-1)[..., 0]
+    return tok, score

@@ -1,11 +1,18 @@
-"""Reverse-process samplers: DNDM family + baselines."""
+"""Reverse-process samplers: DNDM family + baselines.
+
+``registry`` maps method names to :class:`~repro.core.samplers.registry.
+SamplerSpec` entries — the single source of truth for what can be served;
+``loop`` is the shared sampler skeleton.
+"""
 from repro.core.samplers import (d3pm, ddim, dndm, dndm_continuous,
-                                 dndm_topk, mask_predict, rdm)
+                                 dndm_topk, loop, mask_predict, rdm,
+                                 registry)
 from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
                                       init_noise_tokens, select_x0)
 
 __all__ = [
-    "d3pm", "ddim", "dndm", "dndm_continuous", "dndm_topk", "mask_predict", "rdm",
+    "d3pm", "ddim", "dndm", "dndm_continuous", "dndm_topk", "loop",
+    "mask_predict", "rdm", "registry",
     "DenoiseFn", "SamplerConfig", "SamplerOutput", "init_noise_tokens",
     "select_x0",
 ]

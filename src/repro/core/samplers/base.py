@@ -42,17 +42,12 @@ def select_x0(key: jax.Array, logits: Array, noise: NoiseDist,
               cfg: SamplerConfig) -> tuple[Array, Array]:
     """Pick x0_hat from logits; returns (tokens (B,N), scores (B,N)).
 
-    Scores are the per-token log-probabilities of the chosen token —
-    exactly the quantity RDM-k / DNDM-k rank on (paper App. E).
+    Thin shim over :func:`repro.core.decode.decode_tokens`, kept for API
+    stability — the decode layer owns the backend selection and the
+    Gumbel-max sample mode.
     """
-    logits = logits + noise.logit_mask(logits.dtype)
-    logp = jax.nn.log_softmax(logits / cfg.temperature, axis=-1)
-    if cfg.x0_mode == "argmax":
-        tok = logp.argmax(-1)
-    else:
-        tok = jax.random.categorical(key, logp, axis=-1)
-    score = jnp.take_along_axis(logp, tok[..., None], axis=-1)[..., 0]
-    return tok.astype(jnp.int32), score
+    from repro.core import decode
+    return decode.decode_tokens(key, logits, noise, cfg)
 
 
 def init_noise_tokens(key: jax.Array, noise: NoiseDist, batch: int,

@@ -2,6 +2,8 @@
 
 One network call per step: NFE = T.  Supports multinomial and absorbing
 noise through the shared posterior module.  Fully jittable (lax.scan).
+The posterior needs the full x0 probability vector, so this baseline
+cannot use the fused argmax decode path.
 """
 from __future__ import annotations
 
@@ -9,9 +11,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.noise import NoiseDist
-from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
-                                      init_noise_tokens)
 from repro.core.posterior import posterior
+from repro.core.samplers import loop
+from repro.core.samplers.base import DenoiseFn, SamplerConfig, SamplerOutput
 from repro.core.schedules import Schedule
 
 Array = jnp.ndarray
@@ -22,11 +24,9 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
            cond=None, cfg: SamplerConfig = SamplerConfig()) -> SamplerOutput:
     T = schedule.T
     alphas = jnp.asarray(schedule.alphas, jnp.float32)
-    k_x, k_loop = jax.random.split(key)
-    x = init_noise_tokens(k_x, noise, batch, N)
+    _, x, k_loop = loop.setup(key, noise, batch, N)
 
-    def step(x, inp):
-        t, k = inp                                   # t: scalar int
+    def step(x, t, k):
         t_norm = jnp.full((batch,), t / T, jnp.float32)
         logits = denoise_fn(x, t_norm, cond) + noise.logit_mask()
         x0_probs = jax.nn.softmax(logits / cfg.temperature, axis=-1)
@@ -34,9 +34,8 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
         a_t = jnp.full((batch, 1), alphas[t])
         p = posterior(x, x0_probs, a_tm1, a_t, noise)
         x = jax.random.categorical(k, jnp.log(p + 1e-30), axis=-1)
-        return x.astype(jnp.int32), None
+        return x.astype(jnp.int32)
 
     ts = jnp.arange(T, 0, -1)
-    keys = jax.random.split(k_loop, T)
-    x, _ = jax.lax.scan(step, x, (ts, keys))
+    x = loop.scan_loop(k_loop, ts, x, step)
     return SamplerOutput(tokens=x, nfe=T, aux={})

@@ -18,9 +18,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import decode
 from repro.core.noise import NoiseDist
-from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
-                                      init_noise_tokens, select_x0)
+from repro.core.samplers import loop
+from repro.core.samplers.base import DenoiseFn, SamplerConfig, SamplerOutput
 from repro.core.schedules import Schedule
 
 Array = jnp.ndarray
@@ -37,21 +38,19 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
     alphas = jnp.asarray(schedule.alphas, jnp.float32)
     ts = jnp.arange(T, 0, -stride)              # current times
     ts_prev = jnp.maximum(ts - stride, 0)       # jump targets
-    k_x, k_loop = jax.random.split(key)
-    x = init_noise_tokens(k_x, noise, batch, N)
+    _, x, k_loop = loop.setup(key, noise, batch, N)
 
-    def step(x, inp):
-        t, t_prev, k = inp
+    def step(x, t_pair, k):
+        t, t_prev = t_pair
         k_sel, k_jump = jax.random.split(k)
         t_norm = jnp.full((batch,), t / T, jnp.float32)
         logits = denoise_fn(x, t_norm, cond)
-        x0_hat, _ = select_x0(k_sel, logits, noise, cfg)
+        x0_hat, _ = decode.decode_tokens(k_sel, logits, noise, cfg)
         a_prev, a_t = alphas[t_prev], alphas[t]
         sigma = (1.0 - a_prev) / jnp.maximum(1.0 - a_t, 1e-9)
         keep = jax.random.bernoulli(k_jump, jnp.clip(sigma, 0, 1),
                                     (batch, N))
-        return jnp.where(keep, x, x0_hat).astype(jnp.int32), None
+        return jnp.where(keep, x, x0_hat).astype(jnp.int32)
 
-    keys = jax.random.split(k_loop, len(ts))
-    x, _ = jax.lax.scan(step, x, (ts, ts_prev, keys))
+    x = loop.scan_loop(k_loop, (ts, ts_prev), x, step)
     return SamplerOutput(tokens=x, nfe=len(ts), aux={})

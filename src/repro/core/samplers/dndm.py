@@ -17,6 +17,10 @@ TPU-friendliness:
     "step hosts a transition".  Matches Algorithm 1 under the same keys;
     on TPU cond does not save FLOPs, so this exists for equivalence tests
     and as the shard_map-able inner loop.
+
+All three decode through :func:`repro.core.decode.fused_update` — the
+select-x0 + eq. (9) update is a single fused pass (streaming Pallas
+kernel on TPU, pure-JAX reference elsewhere).
 """
 from __future__ import annotations
 
@@ -26,31 +30,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import decode
 from repro.core.noise import NoiseDist
-from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
-                                      init_noise_tokens, select_x0)
-from repro.core.transition import TransitionDist, sample_transition_times
+from repro.core.samplers import loop
+from repro.core.samplers.base import DenoiseFn, SamplerConfig, SamplerOutput
+from repro.core.transition import TransitionDist
 
 Array = jnp.ndarray
-
-
-def _update(x: Array, x0_hat: Array, tau: Array, t: Array,
-            version: int) -> Array:
-    """eq. (9) / Algorithm 3: reveal tokens at (or past) their tau."""
-    if version == 1:
-        return jnp.where(tau == t, x0_hat, x)
-    return jnp.where(tau >= t, x0_hat, x)       # Alg 3: keep refreshing
 
 
 @partial(jax.jit, static_argnames=("denoise_fn", "noise", "cfg", "version",
                                    "T"))
 def _step(x, t, tau, k, cond, *, denoise_fn, noise, cfg, version, T):
-    """One DNDM network call + eq. (9) update.  Module-level so that
-    repeated host-loop calls with the same denoiser hit the jit cache."""
+    """One DNDM network call + fused eq. (9) decode-update.  Module-level
+    so that repeated host-loop calls with the same denoiser hit the jit
+    cache."""
     t_norm = jnp.full((x.shape[0],), t / T, jnp.float32)
     logits = denoise_fn(x, t_norm, cond)
-    x0_hat, score = select_x0(k, logits, noise, cfg)
-    return _update(x, x0_hat, tau, t, version), score
+    return decode.fused_update(k, logits, x, tau, t, noise, cfg,
+                               version=version)
 
 
 def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
@@ -60,27 +58,27 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
            shared_tau: bool = True) -> SamplerOutput:
     """Algorithm 1 (version=1) / Algorithm 3 (version=2) — faithful.
 
-    The python loop below is the honest realization of "function evaluation
+    The host loop below is the honest realization of "function evaluation
     only for t in T": times not in the transition set never touch the
     network, so wall-clock scales with |T|, not T.
     """
     T = dist.T
-    k_tau, k_x, k_loop = jax.random.split(key, 3)
-    tau = sample_transition_times(k_tau, dist, batch, N, order=order,
-                                  shared=shared_tau)
-    x = init_noise_tokens(k_x, noise, batch, N)
+    tau, x, k_loop = loop.setup(key, noise, batch, N, dist=dist,
+                                order=order, shared=shared_tau)
 
     # Predetermined: the whole schedule of network calls is known *now*.
     times = np.unique(np.asarray(jax.device_get(tau)))[::-1]   # descending
 
     trace = []
-    keys = jax.random.split(k_loop, len(times))
-    for i, t in enumerate(times):
-        x, _ = _step(x, jnp.asarray(t, jnp.float32), tau, keys[i], cond,
+
+    def step(x, t, k):
+        return _step(x, jnp.asarray(t, jnp.float32), tau, k, cond,
                      denoise_fn=denoise_fn, noise=noise, cfg=cfg,
                      version=version, T=T)
-        if cfg.trace:
-            trace.append(np.asarray(jax.device_get(x)))
+
+    on_step = ((lambda x: trace.append(np.asarray(jax.device_get(x))))
+               if cfg.trace else None)
+    x = loop.host_loop(k_loop, times, x, step, on_step=on_step)
     return SamplerOutput(tokens=x, nfe=len(times),
                          aux={"tau": tau, "trace": trace, "times": times})
 
@@ -103,7 +101,7 @@ def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
                   nfe_budget: int, cond=None,
                   cfg: SamplerConfig = SamplerConfig(),
                   version: int = 1, order: str = "iid",
-           shared_tau: bool = True) -> SamplerOutput:
+                  shared_tau: bool = True) -> SamplerOutput:
     """Beyond-paper: static-quantile DNDM — one compiled scan, NFE fixed.
 
     Each token's tau is rounded *up* to the nearest grid time, preserving
@@ -114,22 +112,18 @@ def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
     grid = quantile_grid(dist, nfe_budget)
     grid_j = jnp.asarray(grid)
 
-    k_tau, k_x, k_loop = jax.random.split(key, 3)
-    tau = sample_transition_times(k_tau, dist, batch, N, order=order,
-                                  shared=shared_tau)
+    tau, x, k_loop = loop.setup(key, noise, batch, N, dist=dist,
+                                order=order, shared=shared_tau)
     idx = jnp.clip(jnp.searchsorted(grid_j, tau), 0, nfe_budget - 1)
     tau_b = grid_j[idx]                                  # bucketized tau
-    x = init_noise_tokens(k_x, noise, batch, N)
 
-    def step(x, inp):
-        t, k = inp
+    def step(x, t, k):
         t_norm = jnp.full((batch,), t / T, jnp.float32)
         logits = denoise_fn(x, t_norm, cond)
-        x0_hat, _ = select_x0(k, logits, noise, cfg)
-        return _update(x, x0_hat, tau_b, t.astype(tau_b.dtype), version), None
+        return decode.fused_update(k, logits, x, tau_b, t, noise, cfg,
+                                   version=version)
 
-    keys = jax.random.split(k_loop, nfe_budget)
-    x, _ = jax.lax.scan(step, x, (grid_j[::-1].astype(jnp.float32), keys))
+    x = loop.scan_loop(k_loop, grid_j[::-1].astype(jnp.float32), x, step)
     return SamplerOutput(tokens=x, nfe=nfe_budget,
                          aux={"tau": tau, "grid": grid})
 
@@ -138,31 +132,27 @@ def sample_scan(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
                 dist: TransitionDist, batch: int, N: int,
                 cond=None, cfg: SamplerConfig = SamplerConfig(),
                 version: int = 1, order: str = "iid",
-           shared_tau: bool = True) -> SamplerOutput:
+                shared_tau: bool = True) -> SamplerOutput:
     """Fully-jitted faithful DNDM: scan over all T steps, ``lax.cond``
     gating the network call.  Counted NFE equals Algorithm 1's."""
     T = dist.T
-    k_tau, k_x, k_loop = jax.random.split(key, 3)
-    tau = sample_transition_times(k_tau, dist, batch, N, order=order,
-                                  shared=shared_tau)
-    x = init_noise_tokens(k_x, noise, batch, N)
+    tau, x, k_loop = loop.setup(key, noise, batch, N, dist=dist,
+                                order=order, shared=shared_tau)
 
-    def step(carry, inp):
+    def step(carry, t, k):
         x, nfe = carry
-        t, k = inp
         has_transition = jnp.any(tau == t.astype(tau.dtype))
 
         def call(x):
             t_norm = jnp.full((batch,), t / T, jnp.float32)
             logits = denoise_fn(x, t_norm, cond)
-            x0_hat, _ = select_x0(k, logits, noise, cfg)
-            return _update(x, x0_hat, tau, t.astype(tau.dtype), version)
+            return decode.fused_update(k, logits, x, tau, t, noise, cfg,
+                                       version=version)
 
         x = jax.lax.cond(has_transition, call, lambda x: x, x)
-        return (x, nfe + has_transition.astype(jnp.int32)), None
+        return (x, nfe + has_transition.astype(jnp.int32))
 
     ts = jnp.arange(T, 0, -1).astype(jnp.float32)
-    keys = jax.random.split(k_loop, T)
-    (x, nfe), _ = jax.lax.scan(step, (x, jnp.asarray(0)), (ts, keys))
+    x, nfe = loop.scan_loop(k_loop, ts, (x, jnp.asarray(0)), step)
     return SamplerOutput(tokens=x, nfe=int(jax.device_get(nfe)),
                          aux={"tau": tau})

@@ -14,25 +14,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import decode
 from repro.core.noise import NoiseDist
-from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
-                                      init_noise_tokens, select_x0)
+from repro.core.samplers import loop
+from repro.core.samplers.base import DenoiseFn, SamplerConfig, SamplerOutput
 from repro.core.transition import TransitionDist
 
 Array = jnp.ndarray
-
-
-def _sample_times(key, dist: TransitionDist, batch: int, N: int,
-                  order: str, shared: bool = False) -> Array:
-    if shared:
-        t = jnp.broadcast_to(dist.sample_continuous(key, (1, N)),
-                             (batch, N))
-    else:
-        t = dist.sample_continuous(key, (batch, N))
-    if order == "iid":
-        return t
-    srt = jnp.sort(t, axis=-1)
-    return srt[:, ::-1] if order == "l2r" else srt
 
 
 def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
@@ -47,22 +35,20 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
     (``topk=False``) or the highest-score unrevealed token is (``topk=True``,
     the DNDM-k-C variant used in Tables 2/3's infinity rows).
     """
-    k_tau, k_x, k_loop = jax.random.split(key, 3)
-    tau = _sample_times(k_tau, dist, batch, N, order,
-                        shared=shared_tau)                     # (B, N) float
-    x = init_noise_tokens(k_x, noise, batch, N)
+    tau, x, k_loop = loop.setup(key, noise, batch, N, dist=dist,
+                                order=order, shared=shared_tau,
+                                continuous=True)          # (B, N) float
     revealed = jnp.zeros((batch, N), bool)
 
     # descending order of timestamps per row; owner[k] = token index
     owner = jnp.argsort(-tau, axis=-1)                          # (B, N)
     tau_sorted = jnp.take_along_axis(tau, owner, axis=-1)       # descending
 
-    def step(carry, k_idx_key):
+    def step(carry, k_idx, kk):
         x, revealed = carry
-        k_idx, kk = k_idx_key
         t_now = tau_sorted[:, k_idx]                            # (B,)
         logits = denoise_fn(x, t_now, cond)
-        x0_hat, score = select_x0(kk, logits, noise, cfg)
+        x0_hat, score = decode.decode_tokens(kk, logits, noise, cfg)
         if topk:
             s = jnp.where(revealed, -jnp.inf, score)
             tok_idx = s.argmax(-1)                              # (B,)
@@ -71,9 +57,7 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
         upd = jax.nn.one_hot(tok_idx, x.shape[1], dtype=bool)
         x = jnp.where(upd, x0_hat, x)
         revealed = revealed | upd
-        return (x, revealed), None
+        return (x, revealed)
 
-    keys = jax.random.split(k_loop, N)
-    (x, revealed), _ = jax.lax.scan(step, (x, revealed),
-                                    (jnp.arange(N), keys))
+    x, revealed = loop.scan_loop(k_loop, jnp.arange(N), (x, revealed), step)
     return SamplerOutput(tokens=x, nfe=N, aux={"tau": tau})

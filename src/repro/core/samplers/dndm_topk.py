@@ -16,10 +16,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import decode
 from repro.core.noise import NoiseDist
-from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
-                                      init_noise_tokens, select_x0)
-from repro.core.transition import TransitionDist, sample_transition_times
+from repro.core.samplers import loop
+from repro.core.samplers.base import DenoiseFn, SamplerConfig, SamplerOutput
+from repro.core.transition import TransitionDist
 
 Array = jnp.ndarray
 
@@ -45,7 +46,7 @@ def _reveal_topk(x: Array, x0_hat: Array, score: Array, revealed: Array,
 def _step(x, revealed, t, k_target, k, cond, *, denoise_fn, noise, cfg, T):
     t_norm = jnp.full((x.shape[0],), t / T, jnp.float32)
     logits = denoise_fn(x, t_norm, cond)
-    x0_hat, score = select_x0(k, logits, noise, cfg)
+    x0_hat, score = decode.decode_tokens(k, logits, noise, cfg)
     return _reveal_topk(x, x0_hat, score, revealed, k_target)
 
 
@@ -55,22 +56,21 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
            order: str = "iid", shared_tau: bool = True) -> SamplerOutput:
     """Algorithm 4 — host-driven, NFE = |T| as in Algorithm 1."""
     T = dist.T
-    k_tau, k_x, k_loop = jax.random.split(key, 3)
-    tau = sample_transition_times(k_tau, dist, batch, N, order=order,
-                                  shared=shared_tau)
-    x = init_noise_tokens(k_x, noise, batch, N)
+    tau, x, k_loop = loop.setup(key, noise, batch, N, dist=dist,
+                                order=order, shared=shared_tau)
     revealed = jnp.zeros((batch, N), bool)
 
-    tau_np = np.asarray(jax.device_get(tau))
-    times = np.unique(tau_np)[::-1]                      # descending
-    keys = jax.random.split(k_loop, len(times))
-    for i, t in enumerate(times):
+    times = np.unique(np.asarray(jax.device_get(tau)))[::-1]  # descending
+
+    def step(carry, t, k):
+        x, revealed = carry
         # K_{t-1} = #{n : tau_n >= t} — tokens that must be revealed once
         # the reverse process has passed step t (computed on device).
         k_target = jnp.sum(tau >= int(t), axis=-1)
-        x, revealed = _step(x, revealed, jnp.asarray(t, jnp.float32),
-                            k_target, keys[i], cond, denoise_fn=denoise_fn,
-                            noise=noise, cfg=cfg, T=T)
+        return _step(x, revealed, jnp.asarray(t, jnp.float32), k_target, k,
+                     cond, denoise_fn=denoise_fn, noise=noise, cfg=cfg, T=T)
+
+    x, revealed = loop.host_loop(k_loop, times, (x, revealed), step)
     return SamplerOutput(tokens=x, nfe=len(times),
                          aux={"tau": tau, "times": times})
 
@@ -86,27 +86,22 @@ def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
     T = dist.T
     grid = jnp.asarray(quantile_grid(dist, nfe_budget))
 
-    k_tau, k_x, k_loop = jax.random.split(key, 3)
-    tau = sample_transition_times(k_tau, dist, batch, N, order=order,
-                                  shared=shared_tau)
+    tau, x, k_loop = loop.setup(key, noise, batch, N, dist=dist,
+                                order=order, shared=shared_tau)
     # bucketize up to the grid so the last scanned time covers every token
     idx = jnp.clip(jnp.searchsorted(grid, tau), 0, nfe_budget - 1)
     tau_b = grid[idx]
-    x = init_noise_tokens(k_x, noise, batch, N)
     revealed = jnp.zeros((batch, N), bool)
 
-    def step(carry, inp):
+    def step(carry, t, k):
         x, revealed = carry
-        t, k = inp
         k_target = jnp.sum(tau_b >= t.astype(tau_b.dtype), axis=-1)
         t_norm = jnp.full((batch,), t / T, jnp.float32)
         logits = denoise_fn(x, t_norm, cond)
-        x0_hat, score = select_x0(k, logits, noise, cfg)
-        x, revealed = _reveal_topk(x, x0_hat, score, revealed, k_target)
-        return (x, revealed), None
+        x0_hat, score = decode.decode_tokens(k, logits, noise, cfg)
+        return _reveal_topk(x, x0_hat, score, revealed, k_target)
 
-    keys = jax.random.split(k_loop, nfe_budget)
     ts = grid[::-1].astype(jnp.float32)
-    (x, revealed), _ = jax.lax.scan(step, (x, revealed), (ts, keys))
+    x, revealed = loop.scan_loop(k_loop, ts, (x, revealed), step)
     # final sweep guarantee: any token still unrevealed gets the last pred
     return SamplerOutput(tokens=x, nfe=nfe_budget, aux={"tau": tau})

@@ -1,0 +1,66 @@
+"""Shared loop skeleton for every reverse-process sampler.
+
+All samplers follow the same outline: split the key, (maybe) draw the
+predetermined transition-time set, draw x_T ~ q_noise, then walk time
+backwards calling the denoiser.  The walk is either a *host* loop over
+the data-dependent unique transition times (faithful Algorithm 1/4) or a
+single compiled ``lax.scan`` over a static time grid (the TPU-friendly
+variants and all the baselines).  Samplers supply only their per-step
+body; tau sampling, x_T init and key threading live here.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.core.samplers.base import init_noise_tokens
+from repro.core.transition import sample_transition_times
+
+
+def setup(key: jax.Array, noise, batch: int, N: int, *, dist=None,
+          order: str = "iid", shared: bool = False,
+          continuous: bool = False):
+    """The common sampler preamble: returns (tau, x_T, loop_key).
+
+    ``tau`` is None when no transition-time law is given (schedule-driven
+    baselines).  The key always splits 3-way in (tau, x_T, loop) order —
+    the DNDM family keeps its historical streams; the baselines (which
+    used to split 2-way) draw from shifted streams since this skeleton
+    landed.
+    """
+    k_tau, k_x, k_loop = jax.random.split(key, 3)
+    tau = None
+    if dist is not None:
+        tau = sample_transition_times(k_tau, dist, batch, N, order=order,
+                                      shared=shared, continuous=continuous)
+    x = init_noise_tokens(k_x, noise, batch, N)
+    return tau, x, k_loop
+
+
+def host_loop(key: jax.Array, times, carry, step: Callable,
+              on_step: Callable | None = None):
+    """Host-driven walk: ``carry = step(carry, t, key_t)`` per time.
+
+    ``times`` is a host-side sequence (the predetermined unique transition
+    times, descending); the step itself is expected to be jitted."""
+    keys = jax.random.split(key, len(times))
+    for i, t in enumerate(times):
+        carry = step(carry, t, keys[i])
+        if on_step is not None:
+            on_step(carry)
+    return carry
+
+
+def scan_loop(key: jax.Array, ts, carry, step: Callable):
+    """Compiled walk: one ``lax.scan`` over a static per-step input ``ts``
+    (an array, or any pytree of equal-length arrays)."""
+    n = jax.tree_util.tree_leaves(ts)[0].shape[0]
+    keys = jax.random.split(key, n)
+
+    def body(c, inp):
+        t, k = inp
+        return step(c, t, k), None
+
+    carry, _ = jax.lax.scan(body, carry, (ts, keys))
+    return carry

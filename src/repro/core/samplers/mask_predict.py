@@ -10,9 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import decode
 from repro.core.noise import NoiseDist
-from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
-                                      select_x0)
+from repro.core.samplers import loop
+from repro.core.samplers.base import DenoiseFn, SamplerConfig, SamplerOutput
 
 Array = jnp.ndarray
 
@@ -23,23 +24,22 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
     if noise.kind != "absorbing":
         raise ValueError("Mask-Predict needs an absorbing ([MASK]) vocab")
     mask_id = noise.mask_id
-    x = jnp.full((batch, N), mask_id, jnp.int32)
+    # absorbing q_noise IS the all-[MASK] start state
+    _, x, k_loop = loop.setup(key, noise, batch, N)
     M = iterations
 
-    def step(carry, inp):
+    def step(carry, i, k):
         x, _ = carry
-        i, k = inp
         t_norm = jnp.full((batch,), (M - i) / M, jnp.float32)
         logits = denoise_fn(x, t_norm, cond)
-        x0_hat, score = select_x0(k, logits, noise, cfg)
+        x0_hat, score = decode.decode_tokens(k, logits, noise, cfg)
         n_mask = jnp.round(N * (M - 1 - i) / M).astype(jnp.int32)  # to re-mask
         order = jnp.argsort(score, axis=-1)          # ascending confidence
         ranks = jnp.argsort(order, axis=-1)
         remask = ranks < n_mask
         x = jnp.where(remask, mask_id, x0_hat)
-        return (x.astype(jnp.int32), score), None
+        return (x.astype(jnp.int32), score)
 
-    keys = jax.random.split(key, M)
-    (x, _), _ = jax.lax.scan(step, (x, jnp.zeros((batch, N))),
-                             (jnp.arange(M), keys))
+    x, _ = loop.scan_loop(k_loop, jnp.arange(M),
+                          (x, jnp.zeros((batch, N))), step)
     return SamplerOutput(tokens=x, nfe=M, aux={})

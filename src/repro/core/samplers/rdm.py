@@ -17,9 +17,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import decode
 from repro.core.noise import NoiseDist
-from repro.core.samplers.base import (DenoiseFn, SamplerConfig, SamplerOutput,
-                                      init_noise_tokens, select_x0)
+from repro.core.samplers import loop
+from repro.core.samplers.base import DenoiseFn, SamplerConfig, SamplerOutput
 from repro.core.schedules import Schedule
 
 Array = jnp.ndarray
@@ -31,17 +32,15 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
            topk: bool = True) -> SamplerOutput:
     T = schedule.T
     alphas = jnp.asarray(schedule.alphas, jnp.float32)
-    k_x, k_loop = jax.random.split(key)
-    x = init_noise_tokens(k_x, noise, batch, N)
+    _, x, k_loop = loop.setup(key, noise, batch, N)
     denoised = jnp.zeros((batch, N), bool)
 
-    def step(carry, inp):
+    def step(carry, t, k):
         x, denoised = carry
-        t, k = inp
         k_sel, k_route = jax.random.split(k)
         t_norm = jnp.full((batch,), t / T, jnp.float32)
         logits = denoise_fn(x, t_norm, cond)
-        x0_hat, score = select_x0(k_sel, logits, noise, cfg)
+        x0_hat, score = decode.decode_tokens(k_sel, logits, noise, cfg)
         # target number of clean tokens after this step: N * (1 - ?) —
         # clean fraction at time t-1 is alpha_{t-1} (forward marginal).
         k_target = jnp.round(N * alphas[t - 1]).astype(jnp.int32)
@@ -56,9 +55,8 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
         in_top = ranks < k_target[..., None]
         newly = in_top & ~denoised
         x = jnp.where(newly, x0_hat, x)
-        return (x, denoised | newly), None
+        return (x, denoised | newly)
 
     ts = jnp.arange(T, 0, -1)
-    keys = jax.random.split(k_loop, T)
-    (x, denoised), _ = jax.lax.scan(step, (x, denoised), (ts, keys))
+    x, denoised = loop.scan_loop(k_loop, ts, (x, denoised), step)
     return SamplerOutput(tokens=x, nfe=T, aux={})

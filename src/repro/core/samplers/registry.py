@@ -1,0 +1,232 @@
+"""Sampler registry — method dispatch as data.
+
+One :class:`SamplerSpec` per method describes how to run it (host-driven
+loop with data-dependent NFE vs. one compiled scan), its static-NFE rule,
+which engine knobs it honors and which noise kinds it supports.  The
+serving engine, the request scheduler, the launcher CLI, the benchmark
+grids and the examples all enumerate methods from here, so adding a
+sampler needs zero engine edits:
+
+    1. write the sampler module (use ``samplers/loop.py`` for the
+       skeleton and ``core/decode.py`` for the decode path);
+    2. ``register(SamplerSpec(...))`` — below for built-ins, or from any
+       importing module for extensions;
+    3. done — the engine, CLIs and the registry smoke test pick it up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.core.samplers import (d3pm, ddim, dndm, dndm_continuous,
+                                 dndm_topk, mask_predict, rdm)
+from repro.core.samplers.base import SamplerConfig, SamplerOutput
+
+BOTH = frozenset({"absorbing", "multinomial"})
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerRuntime:
+    """Everything a sampler needs at call time, resolved by the engine."""
+
+    denoise_fn: Any            # (x_t, t_norm, cond) -> logits
+    noise: Any                 # NoiseDist
+    schedule: Any              # discrete alpha schedule
+    dist: Any                  # discrete transition-time law D_tau
+    cdist: Any                 # continuous D_tau (DNDM-C)
+    cfg: SamplerConfig
+    steps: int
+    nfe_budget: int            # 0 => default budget max(N // 2, 1)
+    order: str = "iid"
+    shared_tau: bool = True
+    ddim_stride: int = 1
+
+
+def resolved_budget(rt: SamplerRuntime, N: int) -> int:
+    return rt.nfe_budget or max(N // 2, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """How one method runs.
+
+    ``kind="host"`` — python loop over the predetermined transition set;
+    NFE is data-dependent and the engine calls ``run`` directly.
+    ``kind="scan"`` — a single compiled sampler with statically known NFE
+    (``static_nfe``); the engine jits ``run`` once per shape/knob key.
+    """
+
+    name: str
+    kind: str                                     # "host" | "scan"
+    run: Callable[..., SamplerOutput]             # (key, rt, batch, N, cond)
+    static_nfe: Callable[[SamplerRuntime, int], int] | None = None
+    knobs: frozenset = frozenset()                # method-specific knobs
+    noise_kinds: frozenset = BOTH
+    description: str = ""
+
+
+_REGISTRY: dict[str, SamplerSpec] = {}
+
+
+def register(spec: SamplerSpec) -> SamplerSpec:
+    if spec.kind not in ("host", "scan"):
+        raise ValueError(f"{spec.name}: kind must be host|scan")
+    if spec.kind == "scan" and spec.static_nfe is None:
+        raise ValueError(f"{spec.name}: scan samplers need a static_nfe rule")
+    if spec.name in _REGISTRY:
+        raise ValueError(f"sampler {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> SamplerSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown sampler {name!r}; available: "
+                       f"{', '.join(names())}") from None
+
+
+def names(noise_kind: str | None = None) -> tuple[str, ...]:
+    """Registered method names, optionally only those supporting a noise
+    kind — the one enumeration every CLI/benchmark/example goes through."""
+    ns = tuple(sorted(_REGISTRY))
+    if noise_kind is None:
+        return ns
+    return tuple(n for n in ns if noise_kind in _REGISTRY[n].noise_kinds)
+
+
+def specs() -> tuple[SamplerSpec, ...]:
+    return tuple(_REGISTRY[n] for n in names())
+
+
+def run(name: str, key, rt: SamplerRuntime, batch: int, N: int,
+        cond=None) -> SamplerOutput:
+    return get(name).run(key, rt, batch, N, cond)
+
+
+def describe(name: str | None = None) -> str:
+    """Human-readable method sheet (one line per spec) for CLIs and docs:
+    kind, supported noise, honored knobs, description."""
+    lines = []
+    for spec in ([get(name)] if name else specs()):
+        noise = "/".join(sorted(spec.noise_kinds))
+        knobs = ",".join(sorted(spec.knobs)) or "-"
+        lines.append(f"{spec.name:<18} {spec.kind:<4} noise={noise:<23} "
+                     f"knobs={knobs:<32} {spec.description}")
+    return "\n".join(lines)
+
+
+# ------------------------------------------------------------------
+# Built-in methods
+# ------------------------------------------------------------------
+
+def _dndm(version: int):
+    def run(key, rt, batch, N, cond):
+        return dndm.sample(key, rt.denoise_fn, rt.noise, rt.dist, batch, N,
+                           cond=cond, cfg=rt.cfg, version=version,
+                           order=rt.order, shared_tau=rt.shared_tau)
+    return run
+
+
+def _dndm_static(key, rt, batch, N, cond):
+    return dndm.sample_static(key, rt.denoise_fn, rt.noise, rt.dist, batch,
+                              N, resolved_budget(rt, N), cond=cond,
+                              cfg=rt.cfg, order=rt.order,
+                              shared_tau=rt.shared_tau)
+
+
+def _dndm_topk(key, rt, batch, N, cond):
+    return dndm_topk.sample(key, rt.denoise_fn, rt.noise, rt.dist, batch, N,
+                            cond=cond, cfg=rt.cfg, order=rt.order,
+                            shared_tau=rt.shared_tau)
+
+
+def _dndm_topk_static(key, rt, batch, N, cond):
+    return dndm_topk.sample_static(key, rt.denoise_fn, rt.noise, rt.dist,
+                                   batch, N, resolved_budget(rt, N),
+                                   cond=cond, cfg=rt.cfg, order=rt.order,
+                                   shared_tau=rt.shared_tau)
+
+
+def _dndm_c(topk: bool):
+    def run(key, rt, batch, N, cond):
+        return dndm_continuous.sample(key, rt.denoise_fn, rt.noise,
+                                      rt.cdist, batch, N, cond=cond,
+                                      cfg=rt.cfg, topk=topk, order=rt.order,
+                                      shared_tau=rt.shared_tau)
+    return run
+
+
+def _d3pm(key, rt, batch, N, cond):
+    return d3pm.sample(key, rt.denoise_fn, rt.noise, rt.schedule, batch, N,
+                       cond=cond, cfg=rt.cfg)
+
+
+def _rdm(topk: bool):
+    def run(key, rt, batch, N, cond):
+        return rdm.sample(key, rt.denoise_fn, rt.noise, rt.schedule, batch,
+                          N, cond=cond, cfg=rt.cfg, topk=topk)
+    return run
+
+
+def _mask_predict(key, rt, batch, N, cond):
+    return mask_predict.sample(key, rt.denoise_fn, rt.noise, rt.steps,
+                               batch, N, cond=cond, cfg=rt.cfg)
+
+
+def _ddim(key, rt, batch, N, cond):
+    return ddim.sample(key, rt.denoise_fn, rt.noise, rt.schedule, batch, N,
+                       stride=rt.ddim_stride, cond=cond, cfg=rt.cfg)
+
+
+_TAU = frozenset({"order", "shared_tau", "beta"})
+
+register(SamplerSpec(
+    "dndm", "host", _dndm(1), knobs=_TAU,
+    description="Algorithm 1: faithful host loop, NFE = |unique tau|"))
+register(SamplerSpec(
+    "dndm2", "host", _dndm(2), knobs=_TAU,
+    description="Algorithm 3: keep refreshing revealed tokens (tau >= t)"))
+register(SamplerSpec(
+    "dndm_topk", "host", _dndm_topk, knobs=_TAU,
+    description="Algorithm 4: confidence-ranked reveal, same NFE as Alg 1"))
+register(SamplerSpec(
+    "dndm_static", "scan", _dndm_static, static_nfe=resolved_budget,
+    knobs=_TAU | {"nfe_budget"},
+    description="quantile-bucketized Alg 1: one compiled scan, fixed NFE"))
+register(SamplerSpec(
+    "dndm_topk_static", "scan", _dndm_topk_static,
+    static_nfe=resolved_budget, knobs=_TAU | {"nfe_budget"},
+    description="quantile-bucketized Alg 4: one compiled scan, fixed NFE"))
+register(SamplerSpec(
+    "dndm_c", "scan", _dndm_c(False), static_nfe=lambda rt, N: N,
+    knobs=_TAU,
+    description="Algorithm 2: continuous time, NFE = N"))
+register(SamplerSpec(
+    "dndm_c_topk", "scan", _dndm_c(True), static_nfe=lambda rt, N: N,
+    knobs=_TAU,
+    description="Algorithm 2 + confidence-ranked reveal, NFE = N"))
+register(SamplerSpec(
+    "d3pm", "scan", _d3pm, static_nfe=lambda rt, N: rt.steps,
+    knobs=frozenset({"steps"}),
+    description="D3PM ancestral baseline, NFE = T"))
+register(SamplerSpec(
+    "rdm", "scan", _rdm(False), static_nfe=lambda rt, N: rt.steps,
+    knobs=frozenset({"steps"}),
+    description="RDM baseline (uniform routing), NFE = T"))
+register(SamplerSpec(
+    "rdm_k", "scan", _rdm(True), static_nfe=lambda rt, N: rt.steps,
+    knobs=frozenset({"steps"}),
+    description="RDM-k baseline (top-k routing), NFE = T"))
+register(SamplerSpec(
+    "mask_predict", "scan", _mask_predict,
+    static_nfe=lambda rt, N: rt.steps, knobs=frozenset({"steps"}),
+    noise_kinds=frozenset({"absorbing"}),
+    description="Mask-Predict iterative refinement, NFE = M"))
+register(SamplerSpec(
+    "ddim", "scan", _ddim,
+    static_nfe=lambda rt, N: -(-rt.steps // rt.ddim_stride),
+    knobs=frozenset({"steps", "ddim_stride"}),
+    noise_kinds=frozenset({"multinomial"}),
+    description="discrete DDIM baseline, NFE = ceil(T / stride)"))

@@ -117,8 +117,10 @@ def sample_transition_times(
     N: int,
     order: Literal["iid", "l2r", "r2l"] = "iid",
     shared: bool = False,
+    continuous: bool = False,
 ) -> Array:
-    """Sample tau for every token: (batch, N) int32 in {1..T}.
+    """Sample tau for every token: (batch, N) int32 in {1..T}, or f32 in
+    (0, 1] with ``continuous=True`` (DNDM-C timestamps).
 
     ``order`` implements App. C Table 6: "l2r" reassigns the sampled times so
     that left positions transition *later in forward time* — i.e. they are
@@ -130,11 +132,16 @@ def sample_transition_times(
     7/8 report per-batch NFE ~= per-row E|T|), since the network is called
     once per unique time in the whole batch.
     """
+    draw = dist.sample_continuous if continuous else dist.sample
     if shared:
-        tau1 = dist.sample(key, (1, N)).astype(jnp.int32)
+        tau1 = draw(key, (1, N))
+        if not continuous:
+            tau1 = tau1.astype(jnp.int32)
         tau = jnp.broadcast_to(tau1, (batch, N))
     else:
-        tau = dist.sample(key, (batch, N)).astype(jnp.int32)
+        tau = draw(key, (batch, N))
+        if not continuous:
+            tau = tau.astype(jnp.int32)
     if order == "iid":
         return tau
     # sort each row's times; assign descending (l2r) or ascending (r2l)

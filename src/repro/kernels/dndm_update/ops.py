@@ -1,4 +1,11 @@
-"""jit'd wrapper for the fused DNDM update (pads N and K to blocks)."""
+"""jit'd wrapper for the fused DNDM decode-update.
+
+Pads N and K up to TPU-friendly block multiples (8-sublane / 128-lane
+granularity) instead of raising on non-divisible shapes, and auto-detects
+the execution backend: compiled Mosaic on TPU, the Pallas interpreter
+elsewhere (``interpret=None``, the default).  Pass ``interpret`` explicitly
+to force either mode.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -9,25 +16,53 @@ import jax.numpy as jnp
 from repro.kernels.dndm_update.kernel import dndm_update_kernel
 
 
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def default_interpret() -> bool:
+    """Compiled on TPU, interpret everywhere else."""
+    return jax.default_backend() != "tpu"
+
+
 @partial(jax.jit, static_argnames=("version", "block_n", "block_v",
-                                   "interpret"))
-def dndm_update(logits, x, tau, t, *, version: int = 1, block_n: int = 256,
-                block_v: int = 1024, interpret: bool = True):
-    """logits: (B,N,K); x, tau: (B,N) int32; t scalar int32."""
+                                   "temperature", "interpret"))
+def dndm_update(logits, x, tau, t, *, mask=None, gumbel=None,
+                version: int = 1, block_n: int = 256, block_v: int = 1024,
+                temperature: float = 1.0, interpret: bool | None = None):
+    """logits: (B,N,K); x, tau: (B,N) int32; t scalar int32.
+
+    Optional ``mask`` (K,) f32 additive logit penalty and ``gumbel``
+    (B,N,K) f32 noise (sample mode).  Returns updated tokens (B,N) int32.
+    """
+    if interpret is None:
+        interpret = default_interpret()
     B, N, K = logits.shape
-    bn = min(block_n, N)
-    bkv = min(block_v, K)
-    pad_n = (-N) % bn
-    pad_k = (-K) % bkv
+    bn = min(block_n, _round_up(N, 8))
+    bkv = min(block_v, _round_up(K, 128))
+    pad_n = _round_up(N, bn) - N
+    pad_k = _round_up(K, bkv) - K
+    if mask is None:
+        mask = jnp.zeros((K,), jnp.float32)
+    mask = mask.astype(jnp.float32).reshape(1, K)
     if pad_n:
         logits = jnp.pad(logits, ((0, 0), (0, pad_n), (0, 0)))
         x = jnp.pad(x, ((0, 0), (0, pad_n)))
         tau = jnp.pad(tau, ((0, 0), (0, pad_n)))
+        if gumbel is not None:
+            gumbel = jnp.pad(gumbel, ((0, 0), (0, pad_n), (0, 0)))
     if pad_k:
+        # -inf keeps padded vocab lanes out of the running max; gumbel and
+        # mask pad with 0 so the padded lanes stay at exactly -inf.
         logits = jnp.pad(logits, ((0, 0), (0, 0), (0, pad_k)),
                          constant_values=-jnp.inf)
+        mask = jnp.pad(mask, ((0, 0), (0, pad_k)))
+        if gumbel is not None:
+            gumbel = jnp.pad(gumbel, ((0, 0), (0, 0), (0, pad_k)))
     t_arr = jnp.asarray(t, jnp.int32).reshape(1)
-    out = dndm_update_kernel(logits, x.astype(jnp.int32),
-                             tau.astype(jnp.int32), t_arr, version=version,
-                             block_n=bn, block_v=bkv, interpret=interpret)
+    out = dndm_update_kernel(logits, mask, x.astype(jnp.int32),
+                             tau.astype(jnp.int32), t_arr,
+                             gumbel=gumbel, version=version,
+                             temperature=temperature, block_n=bn,
+                             block_v=bkv, interpret=interpret)
     return out[:, :N]

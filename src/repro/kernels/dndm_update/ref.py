@@ -1,11 +1,29 @@
-"""Pure-jnp oracle for the fused DNDM transition update."""
+"""Pure-jnp oracle for the fused DNDM decode-update."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def dndm_update_ref(logits, x, tau, t, *, version: int = 1):
-    """logits: (B,N,K); x, tau: (B,N); t: (1,) — eq. (9) with argmax x0."""
-    x0_hat = logits.argmax(-1).astype(jnp.int32)
+def adjust_logits(logits, mask=None, temperature: float = 1.0, gumbel=None):
+    """The decode pre-activation: f32 cast, temperature, additive mask,
+    optional Gumbel noise.  Op order must stay in lockstep with the Pallas
+    kernel — bitwise token parity across backends depends on it."""
+    a = logits.astype(jnp.float32)
+    if temperature != 1.0:
+        a = a / temperature
+    if mask is not None:
+        a = a + mask
+    if gumbel is not None:
+        a = a + gumbel
+    return a
+
+
+def dndm_update_ref(logits, x, tau, t, *, version: int = 1, mask=None,
+                    temperature: float = 1.0, gumbel=None):
+    """logits: (B,N,K); x, tau: (B,N); t: (1,) — eq. (9) with argmax
+    (or Gumbel-max when ``gumbel`` is given) x0."""
+    a = adjust_logits(logits, mask=mask, temperature=temperature,
+                      gumbel=gumbel)
+    x0_hat = a.argmax(-1).astype(jnp.int32)
     cond = (tau == t[0]) if version == 1 else (tau >= t[0])
     return jnp.where(cond, x0_hat, x)

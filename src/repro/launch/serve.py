@@ -12,17 +12,24 @@ import time
 import jax
 
 import repro.configs as configs_lib
+from repro.core.samplers import registry
 from repro.models.model import Model
 from repro.serving import BatchScheduler, EngineConfig, GenerationEngine
 from repro.training import checkpoint
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="registered samplers:\n" + registry.describe())
     ap.add_argument("--arch", default="dndm-text8")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt", default="")
-    ap.add_argument("--method", default="dndm_topk_static")
+    ap.add_argument("--method", default="dndm_topk_static",
+                    choices=registry.names(),
+                    help="sampler (from the registry)")
+    ap.add_argument("--noise-kind", default="absorbing",
+                    choices=("absorbing", "multinomial"))
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--nfe-budget", type=int, default=16)
     ap.add_argument("--requests", type=int, default=16)
@@ -42,7 +49,8 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
 
     engine = GenerationEngine(model, params, EngineConfig(
-        method=args.method, steps=args.steps, nfe_budget=args.nfe_budget))
+        method=args.method, steps=args.steps, nfe_budget=args.nfe_budget,
+        noise_kind=args.noise_kind))
     sched = BatchScheduler(engine, max_batch=args.max_batch,
                            bucket_len=args.len)
     t0 = time.time()

@@ -1,12 +1,10 @@
 """Generation engine: one object that binds (model params, sampler family)
 and serves batched requests.
 
-The engine exposes every sampler in the repo behind one call so the
-benchmarks and the serving launcher compare apples-to-apples:
-
-  method in {"dndm", "dndm2", "dndm_topk", "dndm_static",
-             "dndm_topk_static", "dndm_c", "dndm_c_topk",
-             "d3pm", "rdm", "rdm_k", "mask_predict"}
+The engine has no per-method branches: every sampler is dispatched
+through ``repro.core.samplers.registry``, so the benchmarks and the
+serving launcher compare apples-to-apples and a newly registered sampler
+is immediately servable (``registry.names()`` is the method list).
 
 For conditional requests, ``cond={"prefix_tokens": src}``: the model
 wrapper feeds [src | x_t] with bidirectional attention and returns target
@@ -18,13 +16,11 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import schedules as sched_lib
 from repro.core import transition as trans_lib
 from repro.core.noise import NoiseDist
-from repro.core.samplers import (SamplerConfig, d3pm, dndm, dndm_continuous,
-                                 dndm_topk, mask_predict, rdm)
+from repro.core.samplers import SamplerConfig, SamplerOutput, registry
 from repro.models.model import Model
 
 
@@ -40,6 +36,7 @@ class EngineConfig:
     temperature: float = 1.0
     order: str = "iid"                # iid | l2r | r2l
     shared_tau: bool = True           # one tau-set per batch (paper NFE)
+    ddim_stride: int = 1              # DDIM baseline subsequence stride
 
 
 class GenerationEngine:
@@ -54,85 +51,85 @@ class GenerationEngine:
         else:
             from repro.core.noise import multinomial
             self.noise = multinomial(v)
-        self.schedule = sched_lib.get(engine_cfg.schedule, engine_cfg.steps)
-        if engine_cfg.beta:
-            a, b = engine_cfg.beta
-            self.dist = trans_lib.beta_approx(engine_cfg.steps, a, b)
-            self.cdist = trans_lib.beta_continuous(a, b)
-        else:
-            self.dist = trans_lib.from_schedule(self.schedule)
-            self.cdist = trans_lib.beta_continuous(17, 4)
+        self.check_method(engine_cfg.method)    # fail fast, list alternatives
         self.denoise_fn = model.denoise_fn(params)
+        self._law_cache: dict = {}
         self._jit_cache: dict = {}
 
-    # scan-based samplers have a statically known NFE, so the whole
-    # sampler is jitted once per (batch, N) and reused across requests —
-    # timing then measures execution, not retracing.
-    def _scan_sampler(self, batch: int, N: int):
+    def check_method(self, name: str) -> registry.SamplerSpec:
+        """Resolve a method and validate it against the engine's noise
+        kind (also used by the scheduler before enqueueing overrides)."""
+        spec = registry.get(name)
+        noise = getattr(self, "noise", None)
+        if noise is not None and noise.kind not in spec.noise_kinds:
+            raise ValueError(
+                f"{spec.name} supports {sorted(spec.noise_kinds)} noise, "
+                f"engine is configured with {noise.kind!r}")
+        return spec
+
+    def _laws(self):
+        """(schedule, dist, cdist) derived from the *current* config —
+        mutating steps/schedule/beta must never serve stale laws."""
         c = self.cfg
-        scfg = SamplerConfig(x0_mode=c.x0_mode, temperature=c.temperature)
-        fn = self.denoise_fn
-        m = c.method
-        budget = c.nfe_budget or max(N // 2, 1)
+        lk = (c.schedule, c.steps, c.beta)
+        if lk not in self._law_cache:
+            schedule = sched_lib.get(c.schedule, c.steps)
+            if c.beta:
+                a, b = c.beta
+                dist = trans_lib.beta_approx(c.steps, a, b)
+                cdist = trans_lib.beta_continuous(a, b)
+            else:
+                dist = trans_lib.from_schedule(schedule)
+                cdist = trans_lib.beta_continuous(17, 4)
+            self._law_cache[lk] = (schedule, dist, cdist)
+        return self._law_cache[lk]
 
-        def call(key, cond):
-            if m == "dndm_static":
-                return dndm.sample_static(
-                    key, fn, self.noise, self.dist, batch, N, budget,
-                    cond=cond, cfg=scfg, order=c.order,
-                    shared_tau=c.shared_tau).tokens
-            if m == "dndm_topk_static":
-                return dndm_topk.sample_static(
-                    key, fn, self.noise, self.dist, batch, N, budget,
-                    cond=cond, cfg=scfg, order=c.order,
-                    shared_tau=c.shared_tau).tokens
-            if m in ("dndm_c", "dndm_c_topk"):
-                return dndm_continuous.sample(
-                    key, fn, self.noise, self.cdist, batch, N, cond=cond,
-                    cfg=scfg, topk=(m == "dndm_c_topk"), order=c.order,
-                    shared_tau=c.shared_tau).tokens
-            if m == "d3pm":
-                return d3pm.sample(key, fn, self.noise, self.schedule,
-                                   batch, N, cond=cond, cfg=scfg).tokens
-            if m in ("rdm", "rdm_k"):
-                return rdm.sample(key, fn, self.noise, self.schedule,
-                                  batch, N, cond=cond, cfg=scfg,
-                                  topk=(m == "rdm_k")).tokens
-            if m == "mask_predict":
-                return mask_predict.sample(key, fn, self.noise, c.steps,
-                                           batch, N, cond=cond,
-                                           cfg=scfg).tokens
-            raise KeyError(m)
-
-        nfe = {"dndm_static": budget, "dndm_topk_static": budget,
-               "dndm_c": N, "dndm_c_topk": N, "d3pm": c.steps,
-               "rdm": c.steps, "rdm_k": c.steps,
-               "mask_predict": c.steps}[m]
-        return jax.jit(call), nfe
-
-    def generate(self, key, batch: int, N: int, cond: dict | None = None):
-        """Returns (SamplerOutput, wall_seconds)."""
+    def runtime(self) -> registry.SamplerRuntime:
         c = self.cfg
-        scfg = SamplerConfig(x0_mode=c.x0_mode, temperature=c.temperature)
-        fn = self.denoise_fn
+        schedule, dist, cdist = self._laws()
+        return registry.SamplerRuntime(
+            denoise_fn=self.denoise_fn, noise=self.noise,
+            schedule=schedule, dist=dist, cdist=cdist,
+            cfg=SamplerConfig(x0_mode=c.x0_mode, temperature=c.temperature),
+            steps=c.steps, nfe_budget=c.nfe_budget, order=c.order,
+            shared_tau=c.shared_tau, ddim_stride=c.ddim_stride)
+
+    def _cache_key(self, method: str, batch: int, N: int,
+                   rt: registry.SamplerRuntime):
+        # every knob that changes the traced computation must be in the
+        # key — reconfiguring the engine (steps, beta, nfe_budget, order,
+        # ...) must never serve a stale compiled sampler.
+        c = self.cfg
+        return (method, batch, N, c.schedule, c.beta, rt.steps,
+                rt.nfe_budget, rt.order, rt.shared_tau, rt.ddim_stride,
+                rt.cfg)
+
+    def generate(self, key, batch: int, N: int, cond: dict | None = None,
+                 method: str | None = None):
+        """Returns (SamplerOutput, wall_seconds).
+
+        ``method`` overrides the engine's configured sampler per call —
+        one engine instance can serve every registered method.
+        """
+        m = method or self.cfg.method
+        spec = self.check_method(m)
+        rt = self.runtime()
         t0 = time.time()
-        m = c.method
-        if m in ("dndm", "dndm2"):
-            out = dndm.sample(key, fn, self.noise, self.dist, batch, N,
-                              cond=cond, cfg=scfg,
-                              version=(2 if m == "dndm2" else 1),
-                              order=c.order, shared_tau=c.shared_tau)
-        elif m == "dndm_topk":
-            out = dndm_topk.sample(key, fn, self.noise, self.dist, batch,
-                                   N, cond=cond, cfg=scfg, order=c.order,
-                                   shared_tau=c.shared_tau)
+        if spec.kind == "host":
+            # host-driven: data-dependent NFE, per-step jit inside the
+            # sampler module hits its own cache
+            out = spec.run(key, rt, batch, N, cond)
         else:
-            ck = (m, batch, N)
+            # scan-based samplers have a statically known NFE, so the
+            # whole sampler is jitted once per (shape, knobs) and reused
+            # across requests — timing measures execution, not retracing.
+            ck = self._cache_key(m, batch, N, rt)
             if ck not in self._jit_cache:
-                self._jit_cache[ck] = self._scan_sampler(batch, N)
+                run = spec.run
+                self._jit_cache[ck] = (
+                    jax.jit(lambda k, c: run(k, rt, batch, N, c).tokens),
+                    spec.static_nfe(rt, N))
             call, nfe = self._jit_cache[ck]
-            tokens = call(key, cond)
-            from repro.core.samplers.base import SamplerOutput
-            out = SamplerOutput(tokens=tokens, nfe=nfe, aux={})
+            out = SamplerOutput(tokens=call(key, cond), nfe=nfe, aux={})
         jax.block_until_ready(out.tokens)
         return out, time.time() - t0

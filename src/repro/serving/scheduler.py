@@ -1,14 +1,15 @@
 """Request scheduler: batches async generation requests.
 
-Requests (each: target length + optional source prefix) are grouped into
-fixed-shape batches (pad to the engine's compiled (batch, N) buckets) so
-the jitted samplers are reused across requests — the serving-throughput
-path of deliverable (b).
+Requests (each: target length + optional source prefix + optional sampler
+method) are grouped into fixed-shape batches (pad to the engine's
+compiled (batch, N) buckets) so the jitted samplers are reused across
+requests — the serving-throughput path of deliverable (b).  Methods are
+validated against the sampler registry; requests naming different
+methods are batched separately so each batch hits one compiled sampler.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -22,13 +23,14 @@ class Request:
     rid: int
     length: int
     prefix: np.ndarray | None = None        # (P,) source tokens
+    method: str | None = None               # resolved at submit time
     result: np.ndarray | None = None
     nfe: int = 0
     wall: float = 0.0
 
 
 class BatchScheduler:
-    """Greedy fixed-bucket batching."""
+    """Greedy fixed-bucket batching, grouped by sampler method."""
 
     def __init__(self, engine: GenerationEngine, max_batch: int = 8,
                  bucket_len: int = 64, seed: int = 0):
@@ -40,14 +42,29 @@ class BatchScheduler:
         self._rid = 0
         self._key = jax.random.PRNGKey(seed)
 
-    def submit(self, length: int, prefix: np.ndarray | None = None) -> int:
+    def submit(self, length: int, prefix: np.ndarray | None = None,
+               method: str | None = None) -> int:
+        # normalize to a concrete method so explicit-default and default
+        # requests land in the same batch, and fail fast (unknown name /
+        # incompatible noise) — once a batch is popped in run() there is
+        # no requeue path for it
+        method = method or self.engine.cfg.method
+        self.engine.check_method(method)
         self._rid += 1
-        self.queue.append(Request(self._rid, length, prefix))
+        self.queue.append(Request(self._rid, length, prefix, method))
         return self._rid
 
     def _bucket(self) -> list[Request]:
-        take = self.queue[: self.max_batch]
-        self.queue = self.queue[self.max_batch:]
+        """Up to max_batch requests sharing the head request's method."""
+        m0 = self.queue[0].method
+        take: list[Request] = []
+        rest: list[Request] = []
+        for r in self.queue:
+            if len(take) < self.max_batch and r.method == m0:
+                take.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
         return take
 
     def run(self) -> dict[int, Request]:
@@ -64,7 +81,8 @@ class BatchScheduler:
                     pre[i, P - len(r.prefix):] = r.prefix
                 cond = {"prefix_tokens": jnp.asarray(pre)}
             self._key, k = jax.random.split(self._key)
-            out, wall = self.engine.generate(k, B, N, cond=cond)
+            out, wall = self.engine.generate(k, B, N, cond=cond,
+                                             method=batch[0].method)
             toks = np.asarray(jax.device_get(out.tokens))
             for i, r in enumerate(batch):
                 r.result = toks[i, : r.length]
