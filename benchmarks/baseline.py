@@ -1,0 +1,73 @@
+"""JSON perf baseline: per-method wall / NFE / tokens-per-second.
+
+``python benchmarks/run.py --json BENCH_decode.json`` sweeps every
+registered sampler on the tiny unconditional checkpoint and writes one
+machine-readable record per method, so future PRs have a perf trajectory
+to diff against instead of eyeballing CSV rows.  Compile time is
+reported separately (the engine warms the jit cache before the timed
+run), so the numbers track sampler execution, not tracing.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from benchmarks import common
+
+BATCH = 8
+REPEATS = 2
+
+
+def _measure(eng, method: str, key) -> dict:
+    out, wall = common.timed_generate(eng, key, BATCH, common.SEQ,
+                                      repeats=REPEATS)
+    toks = BATCH * common.SEQ
+    return {
+        "noise": eng.cfg.noise_kind,
+        "kind": eng.check_method(method).kind,
+        "wall_seconds": round(wall, 6),
+        "compile_seconds": round(out.aux.get("compile_seconds", 0.0), 6),
+        "nfe": int(out.nfe),
+        "tokens_per_second": round(toks / wall, 1),
+        "us_per_nfe": round(wall / max(out.nfe, 1) * 1e6, 1),
+    }
+
+
+def emit(path: str, quick: bool = True) -> dict:
+    """Write the per-method baseline JSON; returns the record."""
+    steps = 16 if quick else 50
+    record: dict = {
+        "schema": 1,
+        "jax_backend": jax.default_backend(),
+        "quick": quick,
+        "config": {"batch": BATCH, "seq": common.SEQ, "steps": steps},
+        "methods": {},
+    }
+    key = jax.random.PRNGKey(0)
+    models = {}
+    # absorbing first: methods supporting both noise kinds are measured
+    # once, on the absorbing checkpoint; multinomial-only methods (ddim)
+    # ride the multinomial one.
+    for noise_kind in ("absorbing", "multinomial"):
+        for method in common.available_methods(noise_kind):
+            if method in record["methods"]:
+                continue
+            if noise_kind not in models:
+                models[noise_kind] = common.unconditional_model(
+                    noise_kind=noise_kind)
+            model, params, _ = models[noise_kind]
+            eng = common.engine(model, params, method=method, steps=steps,
+                                noise_kind=noise_kind,
+                                nfe_budget=min(steps, common.SEQ // 2))
+            t0 = time.time()
+            record["methods"][method] = _measure(eng, method,
+                                                 jax.random.fold_in(key, 1))
+            print(f"# baseline {method}: {time.time() - t0:.1f}s",
+                  flush=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# baseline written to {path}", flush=True)
+    return record

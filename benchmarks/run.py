@@ -2,6 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Set REPRO_BENCH_QUICK=0
 for the full (slow) grids; default quick mode finishes on a laptop CPU.
+``--json PATH`` switches to the per-method perf-baseline emitter
+(wall / compile / NFE / tokens-per-second, see benchmarks/baseline.py).
 
   bench_nfe           -> Tables 7/8  (avg NFE vs T, Theorem D.1)
   bench_speed         -> Fig. 1/4    (wall-clock scaling in steps)
@@ -33,7 +35,20 @@ MODULES = [
 
 
 def main() -> None:
-    only = sys.argv[1:] or MODULES
+    argv = sys.argv[1:]
+    if "--json" in argv:
+        # perf-baseline mode: per-method wall/NFE/tokens-per-second JSON
+        # (see benchmarks/baseline.py) instead of the CSV table sweep
+        i = argv.index("--json")
+        try:
+            path = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--json needs an output path, e.g. "
+                             "--json BENCH_decode.json")
+        from benchmarks.baseline import emit
+        emit(path, quick=QUICK)
+        return
+    only = argv or MODULES
     from benchmarks.common import available_methods
     # stderr: stdout stays a machine-readable CSV stream
     print(f"# engine methods: {', '.join(available_methods())}",

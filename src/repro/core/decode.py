@@ -2,11 +2,14 @@
 
 Every sampler's hot path decodes x0_hat from the (B, N, K) denoiser
 logits and folds it into the running token buffer.  This module is the
-single place where that happens, behind three interchangeable backends:
+single place where that happens — ``fused_update`` (select x0 + eq. (9))
+and ``decode_tokens`` ((token, score) pairs for the confidence-ranked
+samplers) — behind three interchangeable backends:
 
-  * ``"pallas"``    — the streaming kernel in ``kernels/dndm_update``
-                      compiled to Mosaic; never materializes the
-                      log-softmax / argmax intermediate in HBM.
+  * ``"pallas"``    — the streaming kernels in ``kernels/dndm_update``
+                      and ``kernels/decode_scores`` compiled to Mosaic;
+                      never materialize the log-softmax / argmax
+                      intermediate in HBM.
   * ``"interpret"`` — the same kernel under the Pallas interpreter
                       (CPU/GPU debugging; slow, bit-identical tokens).
   * ``"reference"`` — pure jnp (fast on CPU, the correctness oracle).
@@ -27,6 +30,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_scores import ops as _sops
+from repro.kernels.decode_scores import ref as _sref
 from repro.kernels.dndm_update import ops as _ops
 from repro.kernels.dndm_update import ref as _ref
 
@@ -93,22 +98,29 @@ def fused_update(key: jax.Array, logits: Array, x: Array, tau: Array, t,
                             interpret=(backend == "interpret"))
 
 
-def decode_tokens(key: jax.Array, logits: Array, noise,
-                  cfg) -> tuple[Array, Array]:
+def decode_tokens(key: jax.Array, logits: Array, noise, cfg, *,
+                  backend: str = "auto", block_n: int = 256,
+                  block_v: int = 1024) -> tuple[Array, Array]:
     """Pick x0_hat from logits; returns (tokens (B,N), scores (B,N)).
 
     Scores are the per-token log-probabilities of the chosen token —
     exactly the quantity RDM-k / DNDM-k rank on (paper App. E).  Tokens
     come from the same adjusted-logit argmax / Gumbel-max the fused
-    kernel computes, so they agree with ``fused_update`` bitwise.  No
-    backend choice here: the score head is reference-only until the
-    streaming kernel emits (token, score) pairs.
+    kernel computes, so they agree with ``fused_update`` bitwise across
+    every backend.  Backend resolution is identical to ``fused_update``
+    (``backend="auto"``, ``REPRO_DECODE_BACKEND`` respected); the
+    pallas/interpret path is the streaming ``kernels/decode_scores`` op —
+    a running (max, argmax, logsumexp) triple in VMEM across vocab tiles,
+    never materializing the (B, N, K) log-softmax in HBM.
     """
+    backend = resolve_backend(backend)
     mask = noise.logit_mask(jnp.float32)
-    a = _ref.adjust_logits(logits, mask=mask, temperature=cfg.temperature)
     gumbel = _gumbel(key, logits.shape, cfg.x0_mode)
-    sel = a if gumbel is None else a + gumbel
-    tok = sel.argmax(-1).astype(jnp.int32)
-    logp = jax.nn.log_softmax(a, axis=-1)
-    score = jnp.take_along_axis(logp, tok[..., None], axis=-1)[..., 0]
-    return tok, score
+    if backend == "reference":
+        return _sref.decode_scores_ref(logits, mask=mask,
+                                       temperature=cfg.temperature,
+                                       gumbel=gumbel)
+    return _sops.decode_scores(logits, mask=mask, gumbel=gumbel,
+                               temperature=cfg.temperature, block_n=block_n,
+                               block_v=block_v,
+                               interpret=(backend == "interpret"))

@@ -43,8 +43,9 @@ def select_x0(key: jax.Array, logits: Array, noise: NoiseDist,
     """Pick x0_hat from logits; returns (tokens (B,N), scores (B,N)).
 
     Thin shim over :func:`repro.core.decode.decode_tokens`, kept for API
-    stability — the decode layer owns the backend selection and the
-    Gumbel-max sample mode.
+    stability — the decode layer owns the backend selection (streaming
+    pallas/interpret kernel vs pure-jnp reference) and the Gumbel-max
+    sample mode.
     """
     from repro.core import decode
     return decode.decode_tokens(key, logits, noise, cfg)

@@ -11,7 +11,10 @@ time, so every step needs a network call.
 
 DDIM's acceleration = running on a subsequence of timesteps (``stride``):
 NFE = T/stride.  This gives the matched-NFE comparison DNDM-vs-DDIM that
-the paper argues about but does not benchmark.
+the paper argues about but does not benchmark.  x0_hat decoding shares
+``decode.decode_tokens`` with the confidence-ranked samplers, so DDIM
+also rides the streaming decode kernel on the pallas/interpret backends
+(the score output is simply unused here).
 """
 from __future__ import annotations
 

@@ -7,7 +7,9 @@ the T -> infinity limit of Algorithm 1.
 
 Because the step count is exactly N (static!), DNDM-C is fully jittable as
 a single ``lax.scan`` — on TPU this is the most deployment-friendly member
-of the family.  A top-k variant mirrors Algorithm 4 in continuous time.
+of the family.  A top-k variant mirrors Algorithm 4 in continuous time;
+its confidence scores come from ``decode.decode_tokens`` (the streaming
+``decode_scores`` kernel on the pallas/interpret backends).
 """
 from __future__ import annotations
 

@@ -7,6 +7,10 @@ network's own confidence scores (log-prob of the decoded token), never
 re-updating an already-revealed token.  Function evaluations happen only
 when ``K_{t-1} > K_t`` — the same skip set as Algorithm 1, so the NFE is
 identical while quality improves by 1-2 BLEU in the paper.
+
+The per-step (token, score) pair comes from ``decode.decode_tokens``,
+which on the pallas/interpret backends is the streaming ``decode_scores``
+kernel (no (B, N, K) log-softmax in HBM).
 """
 from __future__ import annotations
 

@@ -4,6 +4,8 @@ Iterative refinement with a fixed iteration budget M: start all-[MASK],
 predict every position each round, keep the most confident tokens and
 re-mask the rest on a linear-decay schedule n_i = N * (M - i) / M.
 NFE = M.  Absorbing-vocabulary models only (needs a [MASK] id).
+Confidence is the per-token score from ``decode.decode_tokens`` (the
+streaming ``decode_scores`` kernel on the pallas/interpret backends).
 """
 from __future__ import annotations
 

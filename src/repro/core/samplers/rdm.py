@@ -10,7 +10,11 @@ grown so that the clean fraction tracks alpha_{t-1}:
             scores (the discriminative top-k trick, App. E).
 
 Denoised tokens keep their committed value; noisy tokens are re-noised
-(multinomial) or stay [MASK] (absorbing).  Fully jittable.
+(multinomial) or stay [MASK] (absorbing).  Fully jittable.  The
+(token, score) pair comes from ``decode.decode_tokens`` — on the
+pallas/interpret backends that is the streaming ``decode_scores``
+kernel, so RDM's per-step decode never materializes the (B, N, K)
+log-softmax.
 """
 from __future__ import annotations
 

@@ -4,4 +4,11 @@ Each kernel ships as a package: kernel.py (pl.pallas_call + BlockSpec),
 ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle used by the
 allclose test sweeps).  On this CPU container kernels run with
 interpret=True; on TPU the same call sites compile to Mosaic.
+
+The decode layer owns two fused ops, both streaming over vocab tiles
+without a (B, N, K) HBM intermediate:
+
+  * ``dndm_update``   — select x0_hat + eq. (9) token update;
+  * ``decode_scores`` — (token, score) pairs for the confidence-ranked
+    samplers, with an online-logsumexp score head.
 """

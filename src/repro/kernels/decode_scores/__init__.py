@@ -1,0 +1,3 @@
+"""Streaming (token, score) decode kernel package."""
+from repro.kernels.decode_scores.ops import decode_scores  # noqa: F401
+from repro.kernels.decode_scores.ref import decode_scores_ref  # noqa: F401

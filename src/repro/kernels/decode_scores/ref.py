@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the streaming (token, score) decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dndm_update.ref import adjust_logits
+
+
+def decode_scores_ref(logits, *, mask=None, temperature: float = 1.0,
+                      gumbel=None):
+    """logits: (B,N,K) -> (tokens (B,N) int32, scores (B,N) f32).
+
+    Tokens are the argmax of the adjusted logits (+ Gumbel noise in
+    sample mode) — the same selection ``dndm_update`` applies, so tokens
+    agree bitwise with both ``fused_update`` and the streaming kernel.
+    Scores are the log-softmax of the *noise-free* adjusted logits at the
+    chosen token (the confidence the top-k samplers rank on).
+    """
+    a = adjust_logits(logits, mask=mask, temperature=temperature)
+    sel = a if gumbel is None else a + gumbel
+    tok = sel.argmax(-1).astype(jnp.int32)
+    logp = jax.nn.log_softmax(a, axis=-1)
+    score = jnp.take_along_axis(logp, tok[..., None], axis=-1)[..., 0]
+    return tok, score

@@ -1,9 +1,12 @@
 """Request scheduler: batches async generation requests.
 
 Requests (each: target length + optional source prefix + optional sampler
-method) are grouped into fixed-shape batches (pad to the engine's
-compiled (batch, N) buckets) so the jitted samplers are reused across
-requests — the serving-throughput path of deliverable (b).  Methods are
+method) are grouped into fixed-shape batches so the jitted samplers are
+reused across requests — the serving-throughput path of deliverable (b).
+The batch dimension is padded up to a power-of-two bucket (capped at
+``max_batch``) before hitting the engine, so queues of different sizes
+within a bucket share one compiled sampler instead of retracing per
+distinct queue length; results are sliced back per request.  Methods are
 validated against the sampler registry; requests naming different
 methods are batched separately so each batch hits one compiled sampler.
 """
@@ -54,6 +57,15 @@ class BatchScheduler:
         self.queue.append(Request(self._rid, length, prefix, method))
         return self._rid
 
+    def batch_bucket(self, n: int) -> int:
+        """Compiled batch size serving a group of ``n`` requests: the next
+        power of two, capped at ``max_batch`` — a handful of (batch, N)
+        shapes instead of one jit-cache entry per distinct queue size."""
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.max_batch)
+
     def _bucket(self) -> list[Request]:
         """Up to max_batch requests sharing the head request's method."""
         m0 = self.queue[0].method
@@ -71,7 +83,9 @@ class BatchScheduler:
         """Drain the queue; returns completed requests by id."""
         while self.queue:
             batch = self._bucket()
-            B = len(batch)
+            # pad the batch dim to the compiled bucket; padded rows are
+            # generated (wasted work bounded by 2x) and sliced off below
+            B = self.batch_bucket(len(batch))
             N = self.bucket_len
             cond = None
             if batch[0].prefix is not None:

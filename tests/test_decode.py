@@ -77,6 +77,63 @@ def test_fused_update_matches_decode_tokens(key):
         assert not (np.asarray(tok) == nz.mask_id).any()
 
 
+@pytest.mark.parametrize("B,N,K", SHAPES)
+@pytest.mark.parametrize("mode", ["argmax", "sample"])
+@pytest.mark.parametrize("noise_kind", ["absorbing", "multinomial"])
+def test_decode_tokens_backend_parity(B, N, K, mode, noise_kind, key):
+    """(token, score) parity across backends: tokens bitwise, scores
+    allclose (online vs direct logsumexp), padded shapes included."""
+    ks = jax.random.split(key, 2)
+    logits = jax.random.normal(ks[0], (B, N, K))
+    nz = noise.get(noise_kind, K)
+    cfg = SamplerConfig(x0_mode=mode, temperature=0.7)
+    ref_tok, ref_score = decode.decode_tokens(ks[1], logits, nz, cfg,
+                                              backend="reference")
+    for b in BACKENDS[1:]:
+        tok, score = decode.decode_tokens(ks[1], logits, nz, cfg,
+                                          backend=b, block_n=8, block_v=64)
+        assert (np.asarray(tok) == np.asarray(ref_tok)).all(), (b, mode)
+        np.testing.assert_allclose(np.asarray(score), np.asarray(ref_score),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_decode_tokens_agrees_with_fused_update_all_backends(key):
+    """The (token) half of decode_tokens is the same selection fused_update
+    applies — bitwise, across every backend pairing."""
+    B, N, K = 2, 13, 100                      # padded in both dims
+    ks = jax.random.split(key, 2)
+    logits = jax.random.normal(ks[0], (B, N, K))
+    x = jnp.zeros((B, N), jnp.int32)
+    tau = jnp.full((B, N), 3, jnp.int32)
+    nz = noise.absorbing(K)
+    for mode in ("argmax", "sample"):
+        cfg = SamplerConfig(x0_mode=mode)
+        for bf in BACKENDS:
+            fused = decode.fused_update(ks[1], logits, x, tau, 3, nz, cfg,
+                                        backend=bf, block_n=8, block_v=64)
+            for bd in BACKENDS:
+                tok, _ = decode.decode_tokens(ks[1], logits, nz, cfg,
+                                              backend=bd, block_n=8,
+                                              block_v=64)
+                assert (np.asarray(fused) == np.asarray(tok)).all(), (bf, bd)
+
+
+def test_decode_tokens_env_override(monkeypatch, key):
+    """REPRO_DECODE_BACKEND steers decode_tokens exactly like fused_update."""
+    B, N, K = 1, 8, 32
+    ks = jax.random.split(key, 2)
+    logits = jax.random.normal(ks[0], (B, N, K))
+    nz = noise.absorbing(K)
+    cfg = SamplerConfig(x0_mode="sample")
+    ref_tok, ref_score = decode.decode_tokens(ks[1], logits, nz, cfg,
+                                              backend="reference")
+    monkeypatch.setenv("REPRO_DECODE_BACKEND", "interpret")
+    tok, score = decode.decode_tokens(ks[1], logits, nz, cfg)  # auto
+    assert (np.asarray(tok) == np.asarray(ref_tok)).all()
+    np.testing.assert_allclose(np.asarray(score), np.asarray(ref_score),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_decode_tokens_scores_are_chosen_logprob(key):
     """Scores == log-softmax of the chosen token (the top-k rank key)."""
     B, N, K = 2, 8, 32

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.decode_scores import ops as ds_ops, ref as ds_ref
 from repro.kernels.dndm_update import ops as dndm_ops, ref as dndm_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
 from repro.kernels.ssd_scan import ops as ssd_ops, ref as ssd_ref
@@ -65,6 +66,30 @@ def test_dndm_update_sweep(B, N, K, version, dtype, key):
         ref = dndm_ref.dndm_update_ref(logits, x, tau,
                                        jnp.asarray([t]), version=version)
         assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+@pytest.mark.parametrize("B,N,K", [(1, 16, 32), (3, 40, 100),
+                                   (2, 64, 257), (1, 7, 1000)])
+@pytest.mark.parametrize("gumbel", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_scores_sweep(B, N, K, gumbel, dtype, key):
+    """Streaming (token, score) kernel vs oracle: tokens bitwise, scores
+    allclose (online logsumexp), masked + temperature + both dtypes."""
+    ks = jax.random.split(key, 2)
+    logits = jax.random.normal(ks[0], (B, N, K), dtype)
+    mask = jnp.where(jnp.arange(K) == K - 1, -1e9, 0.0)
+    g = jax.random.gumbel(ks[1], (B, N, K), jnp.float32) if gumbel else None
+    tok, score = ds_ops.decode_scores(logits, mask=mask, gumbel=g,
+                                      temperature=0.7, block_n=16,
+                                      block_v=64)
+    rt, rs = ds_ref.decode_scores_ref(logits, mask=mask, gumbel=g,
+                                      temperature=0.7)
+    assert (np.asarray(tok) == np.asarray(rt)).all()
+    np.testing.assert_allclose(np.asarray(score), np.asarray(rs),
+                               atol=2e-5, rtol=2e-5)
+    # rank key sanity: scores are log-probs of the chosen token
+    assert (np.asarray(score) <= 1e-6).all()
+    assert not (np.asarray(tok) == K - 1).any()   # masked id never decoded
 
 
 @pytest.mark.parametrize("B,S,H,P,Nst,chunk", [

@@ -1,0 +1,68 @@
+"""Serving-layer shape hygiene: batch-bucket padding in the scheduler
+(one compiled sampler per bucket, not per queue size) and the engine's
+compile/execute timing split."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+from repro.serving import BatchScheduler, EngineConfig, GenerationEngine
+
+VOCAB, SEQ, STEPS = 12, 8, 4
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="sched", arch_type="dense", n_layers=1,
+                      d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                      vocab_size=VOCAB, block_pattern=("attn",),
+                      bidirectional=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _engine(tiny):
+    model, params = tiny
+    return GenerationEngine(model, params, EngineConfig(
+        method="dndm_static", steps=STEPS, nfe_budget=2))
+
+
+def test_batch_bucket_rounding(tiny):
+    sched = BatchScheduler(_engine(tiny), max_batch=6, bucket_len=SEQ)
+    assert [sched.batch_bucket(n) for n in (1, 2, 3, 4, 5, 6)] == \
+        [1, 2, 4, 4, 6, 6]
+
+
+def test_one_cache_entry_per_bucket(tiny):
+    """Queues of different sizes within a power-of-two bucket share one
+    compiled sampler — no per-queue-size retracing."""
+    eng = _engine(tiny)
+    sched = BatchScheduler(eng, max_batch=8, bucket_len=SEQ)
+    ids3 = [sched.submit(SEQ) for _ in range(3)]
+    sched.run()
+    assert len(eng._jit_cache) == 1            # batch padded 3 -> 4
+    ids4 = [sched.submit(SEQ) for _ in range(4)]
+    sched.run()
+    assert len(eng._jit_cache) == 1            # 4 hits the same bucket
+    ids2 = [sched.submit(SEQ) for _ in range(2)]
+    sched.run()
+    assert len(eng._jit_cache) == 2            # 2 is a new bucket
+    done = sched.done
+    for rid in ids3 + ids4 + ids2:
+        assert done[rid].result.shape == (SEQ,)
+        toks = np.asarray(done[rid].result)
+        assert (0 <= toks).all() and (toks < VOCAB).all()
+
+
+def test_compile_seconds_reported_separately(tiny, key):
+    """Cache miss: compile_seconds > 0 and excluded from wall.  Cache hit:
+    compile_seconds == 0."""
+    eng = _engine(tiny)
+    out, wall = eng.generate(key, 2, SEQ)
+    assert out.aux["compile_seconds"] > 0.0
+    out2, wall2 = eng.generate(key, 2, SEQ)
+    assert out2.aux["compile_seconds"] == 0.0
+    # AOT-compiled path is deterministic: same key, same tokens
+    assert (np.asarray(out.tokens) == np.asarray(out2.tokens)).all()
+    assert wall >= 0 and wall2 >= 0
