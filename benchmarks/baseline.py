@@ -1,11 +1,20 @@
-"""JSON perf baseline: per-method wall / NFE / tokens-per-second.
+"""JSON perf baseline: per-method wall / NFE / tokens-per-second +
+telemetry snapshot.
 
-``python benchmarks/run.py --json BENCH_decode.json`` sweeps every
+``python -m benchmarks.run --json BENCH_decode.json`` sweeps every
 registered sampler on the tiny unconditional checkpoint and writes one
 machine-readable record per method, so future PRs have a perf trajectory
 to diff against instead of eyeballing CSV rows.  Compile time is
 reported separately (the engine warms the jit cache before the timed
 run), so the numbers track sampler execution, not tracing.
+
+The emitter always enables the ``repro.obs`` metrics registry: each
+method record carries its jit-cache hit/miss counts, and the full
+metrics snapshot (decode backend selection, kernel padding waste,
+scheduler occupancy from a small batched drain) is folded into the
+``telemetry`` section.  Schema version 2 — documented and validated by
+``repro.obs.schema`` (the CI telemetry leg runs the validator against
+this file plus the ``REPRO_TRACE`` JSON-lines export).
 """
 from __future__ import annotations
 
@@ -15,6 +24,7 @@ import time
 import jax
 
 from benchmarks import common
+from repro import obs
 
 BATCH = 8
 REPEATS = 2
@@ -24,22 +34,42 @@ def _measure(eng, method: str, key) -> dict:
     out, wall = common.timed_generate(eng, key, BATCH, common.SEQ,
                                       repeats=REPEATS)
     toks = BATCH * common.SEQ
+    hits = obs.counter("engine.jit_cache.hits")
+    misses = obs.counter("engine.jit_cache.misses")
+    kind = eng.check_method(method).kind
     return {
         "noise": eng.cfg.noise_kind,
-        "kind": eng.check_method(method).kind,
+        "kind": kind,
         "wall_seconds": round(wall, 6),
         "compile_seconds": round(out.aux.get("compile_seconds", 0.0), 6),
         "nfe": int(out.nfe),
         "tokens_per_second": round(toks / wall, 1),
         "us_per_nfe": round(wall / max(out.nfe, 1) * 1e6, 1),
+        "metrics": {
+            "jit_cache_hits": int(hits.value(method=method, kind=kind)),
+            "jit_cache_misses": int(misses.value(method=method, kind=kind)),
+        },
     }
+
+
+def _scheduler_drain(model, params, steps: int) -> None:
+    """Small batched drain so the telemetry snapshot includes the
+    scheduler-layer series (occupancy, padded rows, queue depth)."""
+    from repro.serving.scheduler import BatchScheduler
+    eng = common.engine(model, params, method="dndm_static", steps=steps,
+                        nfe_budget=min(steps, common.SEQ // 2))
+    sched = BatchScheduler(eng, max_batch=4, bucket_len=common.SEQ)
+    for _ in range(3):                  # 3 requests -> bucket of 4
+        sched.submit(common.SEQ)
+    sched.run()
 
 
 def emit(path: str, quick: bool = True) -> dict:
     """Write the per-method baseline JSON; returns the record."""
+    obs.enable()                        # --json implies metrics on
     steps = 16 if quick else 50
     record: dict = {
-        "schema": 1,
+        "schema": 2,
         "jax_backend": jax.default_backend(),
         "quick": quick,
         "config": {"batch": BATCH, "seq": common.SEQ, "steps": steps},
@@ -66,8 +96,17 @@ def emit(path: str, quick: bool = True) -> dict:
                                                  jax.random.fold_in(key, 1))
             print(f"# baseline {method}: {time.time() - t0:.1f}s",
                   flush=True)
+    _scheduler_drain(*models["absorbing"][:2], steps)
+    record["telemetry"] = {
+        "enabled": obs.enabled(),
+        "trace": obs.tracing.sink_path(),
+        "metrics": obs.snapshot(),
+    }
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
         f.write("\n")
+    # mirror the final snapshot into the trace (if REPRO_TRACE is set) so
+    # the JSONL round-trips through repro.obs.schema on its own
+    obs.write_metrics_record()
     print(f"# baseline written to {path}", flush=True)
     return record

@@ -3,7 +3,10 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Set REPRO_BENCH_QUICK=0
 for the full (slow) grids; default quick mode finishes on a laptop CPU.
 ``--json PATH`` switches to the per-method perf-baseline emitter
-(wall / compile / NFE / tokens-per-second, see benchmarks/baseline.py).
+(wall / compile / NFE / tokens-per-second + telemetry snapshot, see
+benchmarks/baseline.py; schema validated by ``repro.obs.schema``).
+Set ``REPRO_TRACE=trace.jsonl`` to additionally export the span/event
+trace (per-step |R_t|, jit-cache, backend selection) as JSON lines.
 
   bench_nfe           -> Tables 7/8  (avg NFE vs T, Theorem D.1)
   bench_speed         -> Fig. 1/4    (wall-clock scaling in steps)

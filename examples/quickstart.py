@@ -4,6 +4,11 @@ with every member of the DNDM family vs the D3PM/RDM baselines.
     PYTHONPATH=src python examples/quickstart.py --steps 200
 
 Prints a table of (sampler, NFE, wall seconds, perplexity-proxy).
+
+Pass ``--metrics`` to turn on the runtime telemetry layer and print the
+span/metric summary at the end (NFE counters, per-step reveal counts,
+jit-cache hits, decode backend selection); ``REPRO_TRACE=path.jsonl``
+additionally exports the full trace as JSON lines.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import noise, schedules
 from repro.core.samplers import registry
 from repro.data import CharTokenizer, DataConfig, DataPipeline
@@ -27,7 +33,11 @@ def main():
     ap.add_argument("--T", type=int, default=50)
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable repro.obs telemetry and print a summary")
     args = ap.parse_args()
+    if args.metrics:
+        obs.enable()
 
     vocab = 28                                     # 27 chars + [MASK]
     cfg = ModelConfig(
@@ -63,6 +73,12 @@ def main():
               f"{np.exp(-ll):>10.2f}")
         if method == "dndm":
             print(f"  sample: {tok.decode(np.asarray(out.tokens)[0])!r}")
+
+    if args.metrics:
+        # the telemetry roll-up: engine spans, per-step |R_t| histogram,
+        # jit-cache hit/miss counters, decode backend selection
+        print("\n== telemetry ==")
+        print(obs.summary())
 
 
 if __name__ == "__main__":

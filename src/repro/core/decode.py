@@ -30,6 +30,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.decode_scores import ops as _sops
 from repro.kernels.decode_scores import ref as _sref
 from repro.kernels.dndm_update import ops as _ops
@@ -83,6 +84,11 @@ def fused_update(key: jax.Array, logits: Array, x: Array, tau: Array, t,
     property at the cost of backend-portable determinism.
     """
     backend = resolve_backend(backend)
+    if obs.enabled():
+        # counted at trace time when called from jitted code: one inc per
+        # compiled program, i.e. "which backend serves this sampler"
+        obs.counter("decode.backend_calls").inc(op="fused_update",
+                                                backend=backend)
     mask = noise.logit_mask(jnp.float32)
     gumbel = _gumbel(key, logits.shape, cfg.x0_mode)
     t = jnp.asarray(t, jnp.int32)
@@ -114,6 +120,9 @@ def decode_tokens(key: jax.Array, logits: Array, noise, cfg, *,
     never materializing the (B, N, K) log-softmax in HBM.
     """
     backend = resolve_backend(backend)
+    if obs.enabled():
+        obs.counter("decode.backend_calls").inc(op="decode_tokens",
+                                                backend=backend)
     mask = noise.logit_mask(jnp.float32)
     gumbel = _gumbel(key, logits.shape, cfg.x0_mode)
     if backend == "reference":

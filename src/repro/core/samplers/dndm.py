@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import decode
 from repro.core.noise import NoiseDist
 from repro.core.samplers import loop
@@ -67,9 +68,22 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
                                 order=order, shared=shared_tau)
 
     # Predetermined: the whole schedule of network calls is known *now*.
-    times = np.unique(np.asarray(jax.device_get(tau)))[::-1]   # descending
+    tau_np = np.asarray(jax.device_get(tau))
+    times = np.unique(tau_np)[::-1]                            # descending
 
     trace = []
+    aux = {"tau": tau, "trace": trace, "times": times}
+    step_attrs = None
+    if obs.enabled():
+        # |R_t| per step — predetermined, so computed host-side from the
+        # tau set already fetched above (no extra device sync).
+        reveals = loop.reveal_series(tau_np, times, version=version)
+        aux["reveal_counts"] = reveals
+        hist = obs.histogram("sampler.reveal_count",
+                             "tokens revealed per network call (|R_t|)")
+        for r in reveals:
+            hist.observe(float(r), sampler="dndm", version=version)
+        step_attrs = lambda i, t: {"reveal": float(reveals[i])}  # noqa: E731
 
     def step(x, t, k):
         return _step(x, jnp.asarray(t, jnp.float32), tau, k, cond,
@@ -78,9 +92,9 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
 
     on_step = ((lambda x: trace.append(np.asarray(jax.device_get(x))))
                if cfg.trace else None)
-    x = loop.host_loop(k_loop, times, x, step, on_step=on_step)
-    return SamplerOutput(tokens=x, nfe=len(times),
-                         aux={"tau": tau, "trace": trace, "times": times})
+    x = loop.host_loop(k_loop, times, x, step, on_step=on_step,
+                       step_attrs=step_attrs)
+    return SamplerOutput(tokens=x, nfe=len(times), aux=aux)
 
 
 def quantile_grid(dist: TransitionDist, nfe_budget: int) -> np.ndarray:

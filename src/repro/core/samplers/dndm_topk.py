@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import decode
 from repro.core.noise import NoiseDist
 from repro.core.samplers import loop
@@ -64,7 +65,21 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
                                 order=order, shared=shared_tau)
     revealed = jnp.zeros((batch, N), bool)
 
-    times = np.unique(np.asarray(jax.device_get(tau)))[::-1]  # descending
+    tau_np = np.asarray(jax.device_get(tau))
+    times = np.unique(tau_np)[::-1]                           # descending
+
+    aux = {"tau": tau, "times": times}
+    step_attrs = None
+    if obs.enabled():
+        # reveal counts: Algorithm 4 reveals *as many* tokens per step as
+        # Algorithm 1 would (K_{t-1} - K_t), i.e. #(tau == t)
+        reveals = loop.reveal_series(tau_np, times, version=1)
+        aux["reveal_counts"] = reveals
+        hist = obs.histogram("sampler.reveal_count",
+                             "tokens revealed per network call (|R_t|)")
+        for r in reveals:
+            hist.observe(float(r), sampler="dndm_topk", version=1)
+        step_attrs = lambda i, t: {"reveal": float(reveals[i])}  # noqa: E731
 
     def step(carry, t, k):
         x, revealed = carry
@@ -74,9 +89,9 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
         return _step(x, revealed, jnp.asarray(t, jnp.float32), k_target, k,
                      cond, denoise_fn=denoise_fn, noise=noise, cfg=cfg, T=T)
 
-    x, revealed = loop.host_loop(k_loop, times, (x, revealed), step)
-    return SamplerOutput(tokens=x, nfe=len(times),
-                         aux={"tau": tau, "times": times})
+    x, revealed = loop.host_loop(k_loop, times, (x, revealed), step,
+                                 step_attrs=step_attrs)
+    return SamplerOutput(tokens=x, nfe=len(times), aux=aux)
 
 
 def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,

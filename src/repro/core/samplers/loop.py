@@ -7,13 +7,24 @@ the data-dependent unique transition times (faithful Algorithm 1/4) or a
 single compiled ``lax.scan`` over a static time grid (the TPU-friendly
 variants and all the baselines).  Samplers supply only their per-step
 body; tau sampling, x_T init and key threading live here.
+
+The host loop is the telemetry anchor for DNDM's headline claim: with
+``repro.obs`` enabled it records per-step host timing
+(``sampler.step_seconds``) and emits one ``sampler.step`` trace event per
+network call, carrying whatever the sampler supplies via ``step_attrs``
+(the DNDM samplers pass the per-step reveal count |R_t|).  Timing is
+host-side dispatch+trace time — steps are *not* blocked on, so enabling
+telemetry never adds a device sync.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Callable
 
 import jax
+import numpy as np
 
+from repro import obs
 from repro.core.samplers.base import init_noise_tokens
 from repro.core.transition import sample_transition_times
 
@@ -38,15 +49,52 @@ def setup(key: jax.Array, noise, batch: int, N: int, *, dist=None,
     return tau, x, k_loop
 
 
+def reveal_series(tau, times, version: int = 1) -> np.ndarray:
+    """Per-step reveal counts |R_t| for a host walk over ``times``.
+
+    ``tau`` is the (B, N) transition-time set (host array), ``times`` the
+    descending unique times the loop visits.  Version 1 (Algorithm 1)
+    reveals the tokens whose tau *equals* t; version 2 (Algorithm 3)
+    re-updates every token with tau >= t.  Returns the per-row count
+    averaged over the batch, one entry per step — the series DNDM's
+    NFE-vs-quality story is about.
+    """
+    tau = np.asarray(tau)
+    times = np.asarray(times).astype(tau.dtype)
+    cmp = (tau[..., None] == times) if version == 1 else \
+        (tau[..., None] >= times)
+    return cmp.sum(axis=-2).mean(axis=0)
+
+
 def host_loop(key: jax.Array, times, carry, step: Callable,
-              on_step: Callable | None = None):
+              on_step: Callable | None = None,
+              step_attrs: Callable[[int, Any], dict] | None = None):
     """Host-driven walk: ``carry = step(carry, t, key_t)`` per time.
 
     ``times`` is a host-side sequence (the predetermined unique transition
-    times, descending); the step itself is expected to be jitted."""
+    times, descending); the step itself is expected to be jitted.
+    ``step_attrs(i, t)`` (optional) supplies extra attributes for the
+    per-step trace event when telemetry is enabled — it is never called
+    on the disabled path.
+    """
     keys = jax.random.split(key, len(times))
+    if not obs.enabled():
+        for i, t in enumerate(times):
+            carry = step(carry, t, keys[i])
+            if on_step is not None:
+                on_step(carry)
+        return carry
+
+    hist = obs.histogram(
+        "sampler.step_seconds",
+        "host-side dispatch+trace seconds per host-loop step (no sync)")
     for i, t in enumerate(times):
+        t0 = time.perf_counter()
         carry = step(carry, t, keys[i])
+        dt = time.perf_counter() - t0
+        hist.observe(dt, loop="host")
+        extra = step_attrs(i, t) if step_attrs is not None else {}
+        obs.event("sampler.step", i=i, t=t, dur_s=dt, **extra)
         if on_step is not None:
             on_step(carry)
     return carry

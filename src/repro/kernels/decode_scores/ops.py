@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_scores.kernel import decode_scores_kernel
-from repro.kernels.dndm_update.ops import _round_up, default_interpret
+from repro.kernels.dndm_update.ops import (_round_up, default_interpret,
+                                           record_padding)
 
 
 @partial(jax.jit, static_argnames=("temperature", "block_n", "block_v",
@@ -32,6 +33,7 @@ def decode_scores(logits, *, mask=None, gumbel=None,
     bkv = min(block_v, _round_up(K, 128))
     pad_n = _round_up(N, bn) - N
     pad_k = _round_up(K, bkv) - K
+    record_padding("decode_scores", N, K, pad_n, pad_k)
     if mask is None:
         mask = jnp.zeros((K,), jnp.float32)
     mask = mask.astype(jnp.float32).reshape(1, K)

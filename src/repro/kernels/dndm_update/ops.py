@@ -13,11 +13,28 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.dndm_update.kernel import dndm_update_kernel
 
 
 def _round_up(v: int, m: int) -> int:
     return -(-v // m) * m
+
+
+def record_padding(kernel: str, N: int, K: int, pad_n: int,
+                   pad_k: int) -> None:
+    """Padding-overhead gauges for a kernel call.  Shapes are static, so
+    when the op is jitted this runs at trace time: one record per
+    compiled program, describing the waste baked into it."""
+    if not obs.enabled():
+        return
+    total = (N + pad_n) * (K + pad_k)
+    obs.counter("kernel.traces").inc(kernel=kernel)
+    obs.gauge("kernel.pad_n").set(pad_n, kernel=kernel)
+    obs.gauge("kernel.pad_k").set(pad_k, kernel=kernel)
+    obs.gauge("kernel.pad_fraction",
+              "fraction of padded (N+pad)(K+pad) elements that is waste"
+              ).set(round(1.0 - (N * K) / total, 6), kernel=kernel)
 
 
 def default_interpret() -> bool:
@@ -42,6 +59,7 @@ def dndm_update(logits, x, tau, t, *, mask=None, gumbel=None,
     bkv = min(block_v, _round_up(K, 128))
     pad_n = _round_up(N, bn) - N
     pad_k = _round_up(K, bkv) - K
+    record_padding("dndm_update", N, K, pad_n, pad_k)
     if mask is None:
         mask = jnp.zeros((K,), jnp.float32)
     mask = mask.astype(jnp.float32).reshape(1, K)

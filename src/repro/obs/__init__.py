@@ -1,0 +1,48 @@
+"""Runtime telemetry: metrics registry + trace spans + schema.
+
+Disabled by default and near-free when disabled (one guard check per
+instrumented call site).  Three ways to turn it on:
+
+* ``REPRO_TRACE=path.jsonl``  — enable metrics *and* export every span /
+  event / metrics record as JSON lines to ``path`` (schema in
+  :mod:`repro.obs.schema`);
+* ``REPRO_METRICS=1``         — enable the in-process metrics registry
+  only (``obs.snapshot()`` / ``obs.summary()``);
+* ``obs.enable()``            — programmatic, e.g. from tests.
+
+``REPRO_JAX_PROFILE=dir`` additionally wraps every ``engine.generate``
+in ``jax.profiler.trace(dir)`` for device-level TPU traces.
+
+See the "Observability" section of ARCHITECTURE.md for the metric-name
+table and which layer emits what.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.obs import metrics, tracing
+from repro.obs.metrics import (counter, disable, enable, enabled, gauge,
+                               histogram, reset, snapshot)
+from repro.obs.tracing import (event, maybe_jax_profile, set_sink, span,
+                               summary, write_metrics_record)
+
+__all__ = [
+    "counter", "gauge", "histogram", "snapshot", "reset",
+    "enable", "disable", "enabled",
+    "span", "event", "summary", "set_sink", "write_metrics_record",
+    "maybe_jax_profile", "metrics", "tracing", "configure_from_env",
+]
+
+
+def configure_from_env() -> None:
+    """Read REPRO_TRACE / REPRO_METRICS once; idempotent."""
+    trace = os.environ.get("REPRO_TRACE", "").strip()
+    if trace:
+        enable()
+        if tracing.sink_path() != trace:
+            set_sink(trace)
+    elif os.environ.get("REPRO_METRICS", "").strip() not in ("", "0"):
+        enable()
+
+
+configure_from_env()

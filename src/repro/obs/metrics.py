@@ -1,0 +1,174 @@
+"""Process-wide metrics registry: counters, gauges, histograms — labeled.
+
+Zero-dependency and **disabled by default**: every record method opens
+with a single ``if not _ENABLED: return`` guard, so with telemetry off
+the cost of an instrumented call site is one module-global read (no
+label-dict construction, no allocation, verified by
+``tests/test_obs.py::test_disabled_path_overhead``).  Enable with
+:func:`enable` or by setting ``REPRO_METRICS=1`` / ``REPRO_TRACE=...``
+in the environment (read once when ``repro.obs`` is imported).
+
+Instruments are created lazily by name (``counter(name)`` is
+get-or-create; name collisions across types raise) and accept arbitrary
+keyword labels per record call::
+
+    obs.counter("engine.nfe").inc(out.nfe, method="dndm")
+    obs.histogram("engine.wall_seconds").observe(wall, method="dndm")
+
+Semantics note for jitted code: a record call placed inside a
+``jax.jit``-traced Python body executes at *trace* time — once per
+compilation, not once per device execution.  The kernel padding gauges
+and decode backend counters live in traced code deliberately: they
+describe the compiled program (one value per trace), and are documented
+as such in ARCHITECTURE.md.
+"""
+from __future__ import annotations
+
+import threading
+
+_ENABLED = False
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def enable() -> None:
+    global _ENABLED
+    _ENABLED = True
+
+
+def disable() -> None:
+    global _ENABLED
+    _ENABLED = False
+
+
+def _labels_key(labels: dict) -> tuple:
+    return tuple(sorted(labels.items()))
+
+
+class _Instrument:
+    kind = "abstract"
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.series: dict = {}       # labels-key -> value/stats
+
+    def _snapshot_value(self, v):
+        return v
+
+    def snapshot(self) -> dict:
+        return {"type": self.kind, "help": self.help,
+                "series": [{"labels": dict(k),
+                            "value": self._snapshot_value(v)}
+                           for k, v in sorted(self.series.items())]}
+
+
+class Counter(_Instrument):
+    kind = "counter"
+
+    def inc(self, value: float = 1, **labels) -> None:
+        if not _ENABLED:
+            return
+        k = _labels_key(labels)
+        self.series[k] = self.series.get(k, 0) + value
+
+    def value(self, **labels):
+        return self.series.get(_labels_key(labels), 0)
+
+
+class Gauge(_Instrument):
+    kind = "gauge"
+
+    def set(self, value, **labels) -> None:
+        if not _ENABLED:
+            return
+        self.series[_labels_key(labels)] = value
+
+    def value(self, **labels):
+        return self.series.get(_labels_key(labels))
+
+
+# decade buckets: 100ns .. 100s covers step timings and reveal counts
+_BUCKET_EDGES = tuple(10.0 ** e for e in range(-7, 3))
+
+
+class Histogram(_Instrument):
+    kind = "histogram"
+
+    def observe(self, value: float, **labels) -> None:
+        if not _ENABLED:
+            return
+        k = _labels_key(labels)
+        s = self.series.get(k)
+        if s is None:
+            s = self.series[k] = {
+                "count": 0, "sum": 0.0, "min": value, "max": value,
+                "buckets": [0] * (len(_BUCKET_EDGES) + 1)}
+        s["count"] += 1
+        s["sum"] += value
+        if value < s["min"]:
+            s["min"] = value
+        if value > s["max"]:
+            s["max"] = value
+        i = 0
+        for edge in _BUCKET_EDGES:
+            if value <= edge:
+                break
+            i += 1
+        s["buckets"][i] += 1
+
+    def value(self, **labels):
+        return self.series.get(_labels_key(labels))
+
+    def _snapshot_value(self, s: dict) -> dict:
+        buckets = {}
+        for i, c in enumerate(s["buckets"]):
+            if c:
+                le = (f"{_BUCKET_EDGES[i]:g}" if i < len(_BUCKET_EDGES)
+                      else "inf")
+                buckets[f"le_{le}"] = c
+        return {"count": s["count"], "sum": s["sum"], "min": s["min"],
+                "max": s["max"],
+                "mean": s["sum"] / s["count"] if s["count"] else 0.0,
+                "buckets": buckets}
+
+
+_lock = threading.Lock()
+_REGISTRY: dict[str, _Instrument] = {}
+
+
+def _get(cls, name: str, help: str) -> _Instrument:
+    with _lock:
+        inst = _REGISTRY.get(name)
+        if inst is None:
+            inst = _REGISTRY[name] = cls(name, help)
+        elif not isinstance(inst, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{inst.kind}, not {cls.kind}")
+        return inst
+
+
+def counter(name: str, help: str = "") -> Counter:
+    return _get(Counter, name, help)
+
+
+def gauge(name: str, help: str = "") -> Gauge:
+    return _get(Gauge, name, help)
+
+
+def histogram(name: str, help: str = "") -> Histogram:
+    return _get(Histogram, name, help)
+
+
+def snapshot() -> dict:
+    """JSON-able view of every instrument with at least one series."""
+    return {name: inst.snapshot()
+            for name, inst in sorted(_REGISTRY.items()) if inst.series}
+
+
+def reset() -> None:
+    """Clear recorded values; registered instruments survive."""
+    for inst in _REGISTRY.values():
+        inst.series.clear()

@@ -1,0 +1,234 @@
+"""Nestable trace spans with a JSON-lines exporter.
+
+A span is a timed region (``with obs.span("engine.generate", method=m)``)
+that records name, wall duration, attributes, and its parent span — the
+nesting is tracked per-thread, so a scheduler batch span contains the
+engine span which contains the per-step sampler events.  An *event* is a
+point-in-time record attached to the current span.
+
+When disabled (the default), :func:`span` returns a shared no-op
+singleton and :func:`event` returns after one guard check — nothing is
+allocated or recorded.  When enabled, records accumulate in a bounded
+in-memory buffer (``records()``/:func:`summary`) and, if a sink is set
+(``REPRO_TRACE=path.jsonl`` or :func:`set_sink`), each record is also
+appended to the file as one JSON line.  The export schema is documented
+and validated in :mod:`repro.obs.schema`.
+
+``maybe_jax_profile()`` is the optional device-level hook: when
+``REPRO_JAX_PROFILE=dir`` is set it wraps the region in
+``jax.profiler.trace(dir)`` (TPU/TensorBoard traces); otherwise it is
+the same no-op singleton.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import threading
+import time
+
+from repro.obs import metrics as _metrics
+
+_MAX_RECORDS = 200_000
+
+_tls = threading.local()
+_next_id = itertools.count(1).__next__
+_records: list[dict] = []
+_sink = None
+_sink_path: str | None = None
+
+
+def _stack() -> list:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = _tls.stack = []
+    return st
+
+
+def _coerce(v):
+    """Attribute values must be JSON scalars; numpy/jax scalars unwrap."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if hasattr(v, "item"):
+        try:
+            return v.item()
+        except Exception:           # noqa: BLE001 — fall through to str
+            pass
+    return str(v)
+
+
+def _emit(rec: dict) -> None:
+    if len(_records) < _MAX_RECORDS:
+        _records.append(rec)
+    if _sink is not None:
+        _sink.write(json.dumps(rec) + "\n")
+        _sink.flush()
+
+
+class _NullSpan:
+    """Shared do-nothing span: the disabled path allocates nothing."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **attrs):
+        return self
+
+
+NULL_SPAN = _NullSpan()
+
+
+class Span:
+    __slots__ = ("name", "attrs", "span_id", "parent_id", "ts", "_t0")
+
+    def __init__(self, name: str, attrs: dict):
+        self.name = name
+        self.attrs = attrs
+
+    def __enter__(self):
+        st = _stack()
+        self.parent_id = st[-1].span_id if st else None
+        self.span_id = _next_id()
+        self.ts = time.time()
+        self._t0 = time.perf_counter()
+        st.append(self)
+        return self
+
+    def set(self, **attrs):
+        self.attrs.update(attrs)
+        return self
+
+    def __exit__(self, *exc):
+        dur = time.perf_counter() - self._t0
+        st = _stack()
+        if st and st[-1] is self:
+            st.pop()
+        _emit({"kind": "span", "name": self.name, "ts": self.ts,
+               "span_id": self.span_id, "parent_id": self.parent_id,
+               "dur_s": dur,
+               "attrs": {k: _coerce(v) for k, v in self.attrs.items()}})
+        return False
+
+
+def span(name: str, **attrs):
+    """Timed region; no-op singleton when telemetry is disabled."""
+    if not _metrics.enabled():
+        return NULL_SPAN
+    return Span(name, attrs)
+
+
+def event(name: str, **attrs) -> None:
+    """Point-in-time record under the current span."""
+    if not _metrics.enabled():
+        return
+    st = _stack()
+    _emit({"kind": "event", "name": name, "ts": time.time(),
+           "span_id": _next_id(),
+           "parent_id": st[-1].span_id if st else None,
+           "attrs": {k: _coerce(v) for k, v in attrs.items()}})
+
+
+def write_metrics_record() -> None:
+    """Append the current metrics snapshot as one trace record."""
+    if not _metrics.enabled():
+        return
+    _emit({"kind": "metrics", "ts": time.time(), "span_id": _next_id(),
+           "parent_id": None, "attrs": {},
+           "metrics": _metrics.snapshot()})
+
+
+def set_sink(path: str) -> None:
+    """Open (append) a JSON-lines sink; closes any previous sink."""
+    global _sink, _sink_path
+    close_sink()
+    _sink = open(path, "a")
+    _sink_path = path
+
+
+def close_sink(final_metrics: bool = False) -> None:
+    global _sink, _sink_path
+    if _sink is None:
+        return
+    if final_metrics:
+        write_metrics_record()
+    _sink.close()
+    _sink = None
+    _sink_path = None
+
+
+def sink_path() -> str | None:
+    return _sink_path
+
+
+def records() -> list[dict]:
+    return list(_records)
+
+
+def clear() -> None:
+    _records.clear()
+    _tls.stack = []
+
+
+def summary() -> str:
+    """Human-readable roll-up: spans aggregated by name, then metrics."""
+    agg: dict[str, list[float]] = {}
+    for r in _records:
+        if r["kind"] == "span":
+            agg.setdefault(r["name"], []).append(r["dur_s"])
+    lines = ["== spans ==",
+             f"{'name':<28} {'count':>6} {'total_s':>9} {'mean_s':>9} "
+             f"{'max_s':>9}"]
+    for name in sorted(agg):
+        d = agg[name]
+        lines.append(f"{name:<28} {len(d):>6} {sum(d):>9.4f} "
+                     f"{sum(d) / len(d):>9.4f} {max(d):>9.4f}")
+    lines.append("== metrics ==")
+    for name, inst in sorted(_metrics.snapshot().items()):
+        for s in inst["series"]:
+            labels = ",".join(f"{k}={v}" for k, v in s["labels"].items())
+            v = s["value"]
+            if isinstance(v, dict):                     # histogram stats
+                v = (f"count={v['count']} mean={v['mean']:.4g} "
+                     f"min={v['min']:.4g} max={v['max']:.4g}")
+            lines.append(f"{name}{{{labels}}} {v}")
+    return "\n".join(lines)
+
+
+class _Profile:
+    """jax.profiler.trace wrapper that never breaks the serving path."""
+
+    __slots__ = ("dir", "_cm")
+
+    def __init__(self, dir: str):
+        self.dir = dir
+        self._cm = None
+
+    def __enter__(self):
+        try:
+            import jax
+            self._cm = jax.profiler.trace(self.dir)
+            self._cm.__enter__()
+        except Exception:           # noqa: BLE001 — profiling is best-effort
+            self._cm = None
+        return self
+
+    def __exit__(self, *exc):
+        if self._cm is not None:
+            try:
+                self._cm.__exit__(*exc)
+            except Exception:       # noqa: BLE001
+                pass
+        return False
+
+
+def maybe_jax_profile():
+    """``jax.profiler.trace`` context if ``REPRO_JAX_PROFILE=dir`` is set."""
+    d = os.environ.get("REPRO_JAX_PROFILE", "").strip()
+    if not d:
+        return NULL_SPAN
+    return _Profile(d)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.serving.engine import GenerationEngine
 
 
@@ -29,7 +30,9 @@ class Request:
     method: str | None = None               # resolved at submit time
     result: np.ndarray | None = None
     nfe: int = 0
-    wall: float = 0.0
+    wall: float = 0.0                       # amortized share of batch_wall
+    batch_wall: float = 0.0                 # wall-clock of the whole batch
+    batch_size: int = 0                     # requests served in that batch
 
 
 class BatchScheduler:
@@ -80,13 +83,23 @@ class BatchScheduler:
         return take
 
     def run(self) -> dict[int, Request]:
-        """Drain the queue; returns completed requests by id."""
+        """Drain the queue; returns completed requests by id.
+
+        Each request records the *amortized* per-request wall share
+        (``wall = batch_wall / batch_size``) plus the batch totals
+        (``batch_wall``, ``batch_size``) — the batch runs once for all
+        its members, so attributing the full wall-clock to every request
+        would overcount serving cost by the batch size.
+        """
         while self.queue:
+            if obs.enabled():
+                obs.gauge("scheduler.queue_depth").set(len(self.queue))
             batch = self._bucket()
             # pad the batch dim to the compiled bucket; padded rows are
             # generated (wasted work bounded by 2x) and sliced off below
             B = self.batch_bucket(len(batch))
             N = self.bucket_len
+            m = batch[0].method
             cond = None
             if batch[0].prefix is not None:
                 P = max(len(r.prefix) for r in batch)
@@ -95,12 +108,29 @@ class BatchScheduler:
                     pre[i, P - len(r.prefix):] = r.prefix
                 cond = {"prefix_tokens": jnp.asarray(pre)}
             self._key, k = jax.random.split(self._key)
-            out, wall = self.engine.generate(k, B, N, cond=cond,
-                                             method=batch[0].method)
+            with obs.span("scheduler.batch", method=m, requests=len(batch),
+                          bucket=B) as sp:
+                out, wall = self.engine.generate(k, B, N, cond=cond,
+                                                 method=m)
+                if obs.enabled():
+                    obs.counter("scheduler.batches").inc(method=m)
+                    obs.counter("scheduler.requests").inc(len(batch),
+                                                          method=m)
+                    obs.counter("scheduler.padded_rows").inc(B - len(batch),
+                                                             method=m)
+                    obs.histogram("scheduler.occupancy").observe(
+                        len(batch) / B, method=m)
+                    obs.histogram("scheduler.batch_wall_seconds").observe(
+                        wall, method=m)
+                    sp.set(wall_s=wall, padded_rows=B - len(batch),
+                           occupancy=len(batch) / B)
             toks = np.asarray(jax.device_get(out.tokens))
+            share = wall / len(batch)
             for i, r in enumerate(batch):
                 r.result = toks[i, : r.length]
                 r.nfe = out.nfe
-                r.wall = wall
+                r.wall = share
+                r.batch_wall = wall
+                r.batch_size = len(batch)
                 self.done[r.rid] = r
         return self.done

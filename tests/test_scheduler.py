@@ -55,6 +55,20 @@ def test_one_cache_entry_per_bucket(tiny):
         assert (0 <= toks).all() and (toks < VOCAB).all()
 
 
+def test_wall_amortized_across_batch(tiny):
+    """A batch runs once for all its requests: each Request records the
+    per-request share in ``wall`` and the totals in ``batch_wall`` /
+    ``batch_size`` (telemetry off — these are core scheduler fields)."""
+    sched = BatchScheduler(_engine(tiny), max_batch=8, bucket_len=SEQ)
+    rids = [sched.submit(SEQ) for _ in range(3)]
+    done = sched.run()
+    for rid in rids:
+        r = done[rid]
+        assert r.batch_size == 3
+        assert r.batch_wall > 0.0
+        assert r.wall == pytest.approx(r.batch_wall / 3)
+
+
 def test_compile_seconds_reported_separately(tiny, key):
     """Cache miss: compile_seconds > 0 and excluded from wall.  Cache hit:
     compile_seconds == 0."""
