@@ -28,6 +28,19 @@ import traceback
 
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "1") == "1"
 
+
+def _out_path(argv: list, flag: str) -> str:
+    i = argv.index(flag)
+    try:
+        path = argv[i + 1]
+    except IndexError:
+        path = ""
+    if not path or path.startswith("--"):
+        raise SystemExit(f"{flag} needs an output path, e.g. "
+                         f"{flag} BENCH{flag[1:].replace('-', '_')}.json "
+                         "(quick mode is REPRO_BENCH_QUICK=1, not a flag)")
+    return path
+
 MODULES = [
     "bench_nfe", "bench_speed", "bench_quality", "bench_unconditional",
     "bench_schedules", "bench_order", "bench_beta_grid",
@@ -42,13 +55,15 @@ def main() -> None:
     if "--json" in argv:
         # perf-baseline mode: per-method wall/NFE/tokens-per-second JSON
         # (see benchmarks/baseline.py) instead of the CSV table sweep
-        i = argv.index("--json")
-        try:
-            path = argv[i + 1]
-        except IndexError:
-            raise SystemExit("--json needs an output path, e.g. "
-                             "--json BENCH_decode.json")
+        path = _out_path(argv, "--json")
         from benchmarks.baseline import emit
+        emit(path, quick=QUICK)
+        return
+    if "--serving" in argv:
+        # Poisson-arrival serving benchmark: drain vs continuous batching
+        # (see benchmarks/serving.py; "kind": "serving" schema-2 JSON)
+        path = _out_path(argv, "--serving")
+        from benchmarks.serving import emit
         emit(path, quick=QUICK)
         return
     only = argv or MODULES

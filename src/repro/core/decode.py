@@ -70,12 +70,18 @@ def _gumbel(key: jax.Array, shape, x0_mode: str) -> Array | None:
 
 def fused_update(key: jax.Array, logits: Array, x: Array, tau: Array, t,
                  noise, cfg, *, version: int = 1, backend: str = "auto",
-                 block_n: int = 256, block_v: int = 1024) -> Array:
+                 block_n: int = 256, block_v: int = 1024,
+                 gumbel: Array | None = None) -> Array:
     """Decode x0_hat and apply the eq. (9) token update in one pass.
 
     ``x_{t-1} = where(tau == t, x0_hat, x_t)`` (``tau >= t`` for
     Algorithm 3 / version=2).  Returns the updated tokens (B, N) int32.
     All backends agree bitwise on the result for a fixed ``key``.
+
+    ``gumbel`` overrides the internally drawn Gumbel tensor (sample mode
+    only) — the stepwise serving path draws one (N, K) slab per row from
+    that row's own key stream so that rows at different diffusion times
+    reproduce their solo-run noise bit-for-bit; ``key`` may then be None.
 
     Memory note: argmax mode is the fully streaming path.  Sample mode
     materializes a (B, N, K) f32 Gumbel tensor so that every backend sees
@@ -90,7 +96,8 @@ def fused_update(key: jax.Array, logits: Array, x: Array, tau: Array, t,
         obs.counter("decode.backend_calls").inc(op="fused_update",
                                                 backend=backend)
     mask = noise.logit_mask(jnp.float32)
-    gumbel = _gumbel(key, logits.shape, cfg.x0_mode)
+    if gumbel is None:
+        gumbel = _gumbel(key, logits.shape, cfg.x0_mode)
     t = jnp.asarray(t, jnp.int32)
     if backend == "reference":
         out = _ref.dndm_update_ref(logits, x, tau.astype(jnp.int32),
@@ -106,7 +113,8 @@ def fused_update(key: jax.Array, logits: Array, x: Array, tau: Array, t,
 
 def decode_tokens(key: jax.Array, logits: Array, noise, cfg, *,
                   backend: str = "auto", block_n: int = 256,
-                  block_v: int = 1024) -> tuple[Array, Array]:
+                  block_v: int = 1024,
+                  gumbel: Array | None = None) -> tuple[Array, Array]:
     """Pick x0_hat from logits; returns (tokens (B,N), scores (B,N)).
 
     Scores are the per-token log-probabilities of the chosen token —
@@ -118,13 +126,17 @@ def decode_tokens(key: jax.Array, logits: Array, noise, cfg, *,
     pallas/interpret path is the streaming ``kernels/decode_scores`` op —
     a running (max, argmax, logsumexp) triple in VMEM across vocab tiles,
     never materializing the (B, N, K) log-softmax in HBM.
+
+    ``gumbel`` overrides the internal draw exactly as in
+    :func:`fused_update` (per-row noise for the stepwise serving path).
     """
     backend = resolve_backend(backend)
     if obs.enabled():
         obs.counter("decode.backend_calls").inc(op="decode_tokens",
                                                 backend=backend)
     mask = noise.logit_mask(jnp.float32)
-    gumbel = _gumbel(key, logits.shape, cfg.x0_mode)
+    if gumbel is None:
+        gumbel = _gumbel(key, logits.shape, cfg.x0_mode)
     if backend == "reference":
         return _sref.decode_scores_ref(logits, mask=mask,
                                        temperature=cfg.temperature,

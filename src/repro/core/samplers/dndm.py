@@ -69,7 +69,7 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
 
     # Predetermined: the whole schedule of network calls is known *now*.
     tau_np = np.asarray(jax.device_get(tau))
-    times = np.unique(tau_np)[::-1]                            # descending
+    times = loop.unique_times(tau_np)                          # descending
 
     trace = []
     aux = {"tau": tau, "trace": trace, "times": times}

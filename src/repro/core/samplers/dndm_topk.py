@@ -66,7 +66,7 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
     revealed = jnp.zeros((batch, N), bool)
 
     tau_np = np.asarray(jax.device_get(tau))
-    times = np.unique(tau_np)[::-1]                           # descending
+    times = loop.unique_times(tau_np)                         # descending
 
     aux = {"tau": tau, "times": times}
     step_attrs = None

@@ -49,6 +49,14 @@ def setup(key: jax.Array, noise, batch: int, N: int, *, dist=None,
     return tau, x, k_loop
 
 
+def unique_times(tau) -> np.ndarray:
+    """Descending unique transition times of a (host) tau set — the
+    predetermined network-call schedule of Algorithm 1/4.  Shared by the
+    solo host loops and the admission-time ``CallSchedule`` planner, so
+    the serving layer walks *exactly* the times a solo run would."""
+    return np.unique(np.asarray(tau))[::-1]
+
+
 def reveal_series(tau, times, version: int = 1) -> np.ndarray:
     """Per-step reveal counts |R_t| for a host walk over ``times``.
 

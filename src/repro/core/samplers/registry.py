@@ -19,7 +19,7 @@ import dataclasses
 from typing import Any, Callable
 
 from repro.core.samplers import (d3pm, ddim, dndm, dndm_continuous,
-                                 dndm_topk, mask_predict, rdm)
+                                 dndm_topk, mask_predict, rdm, stepwise)
 from repro.core.samplers.base import SamplerConfig, SamplerOutput
 
 BOTH = frozenset({"absorbing", "multinomial"})
@@ -54,6 +54,14 @@ class SamplerSpec:
     NFE is data-dependent and the engine calls ``run`` directly.
     ``kind="scan"`` — a single compiled sampler with statically known NFE
     (``static_nfe``); the engine jits ``run`` once per shape/knob key.
+
+    ``schedule_fn(key, rt, N) -> CallSchedule`` exposes the method's
+    predetermined call schedule as data — the times it will call the
+    network, known at admission (every built-in provides one).
+    ``stepwise_step(state, tau, t_row, keys, cond, rt) -> state`` is the
+    opt-in for continuous batching: a jitted batched step advancing each
+    row by one entry of its own schedule (see ``samplers/stepwise.py``);
+    methods without one are served drain-mode only.
     """
 
     name: str
@@ -63,6 +71,8 @@ class SamplerSpec:
     knobs: frozenset = frozenset()                # method-specific knobs
     noise_kinds: frozenset = BOTH
     description: str = ""
+    schedule_fn: Callable[..., Any] | None = None  # (key, rt, N) -> plan
+    stepwise_step: Callable[..., Any] | None = None
 
 
 _REGISTRY: dict[str, SamplerSpec] = {}
@@ -184,49 +194,59 @@ _TAU = frozenset({"order", "shared_tau", "beta"})
 
 register(SamplerSpec(
     "dndm", "host", _dndm(1), knobs=_TAU,
+    schedule_fn=stepwise.dndm_plan,
+    stepwise_step=stepwise.dndm_stepwise(1),
     description="Algorithm 1: faithful host loop, NFE = |unique tau|"))
 register(SamplerSpec(
     "dndm2", "host", _dndm(2), knobs=_TAU,
+    schedule_fn=stepwise.dndm_plan,
+    stepwise_step=stepwise.dndm_stepwise(2),
     description="Algorithm 3: keep refreshing revealed tokens (tau >= t)"))
 register(SamplerSpec(
     "dndm_topk", "host", _dndm_topk, knobs=_TAU,
+    schedule_fn=stepwise.dndm_plan,
+    stepwise_step=stepwise.dndm_topk_stepwise,
     description="Algorithm 4: confidence-ranked reveal, same NFE as Alg 1"))
 register(SamplerSpec(
     "dndm_static", "scan", _dndm_static, static_nfe=resolved_budget,
     knobs=_TAU | {"nfe_budget"},
+    schedule_fn=stepwise.static_grid_plan,
     description="quantile-bucketized Alg 1: one compiled scan, fixed NFE"))
 register(SamplerSpec(
     "dndm_topk_static", "scan", _dndm_topk_static,
     static_nfe=resolved_budget, knobs=_TAU | {"nfe_budget"},
+    schedule_fn=stepwise.static_grid_plan,
     description="quantile-bucketized Alg 4: one compiled scan, fixed NFE"))
 register(SamplerSpec(
     "dndm_c", "scan", _dndm_c(False), static_nfe=lambda rt, N: N,
-    knobs=_TAU,
+    knobs=_TAU, schedule_fn=stepwise.continuous_plan,
     description="Algorithm 2: continuous time, NFE = N"))
 register(SamplerSpec(
     "dndm_c_topk", "scan", _dndm_c(True), static_nfe=lambda rt, N: N,
-    knobs=_TAU,
+    knobs=_TAU, schedule_fn=stepwise.continuous_plan,
     description="Algorithm 2 + confidence-ranked reveal, NFE = N"))
 register(SamplerSpec(
     "d3pm", "scan", _d3pm, static_nfe=lambda rt, N: rt.steps,
-    knobs=frozenset({"steps"}),
+    knobs=frozenset({"steps"}), schedule_fn=stepwise.full_grid_plan,
     description="D3PM ancestral baseline, NFE = T"))
 register(SamplerSpec(
     "rdm", "scan", _rdm(False), static_nfe=lambda rt, N: rt.steps,
-    knobs=frozenset({"steps"}),
+    knobs=frozenset({"steps"}), schedule_fn=stepwise.full_grid_plan,
     description="RDM baseline (uniform routing), NFE = T"))
 register(SamplerSpec(
     "rdm_k", "scan", _rdm(True), static_nfe=lambda rt, N: rt.steps,
-    knobs=frozenset({"steps"}),
+    knobs=frozenset({"steps"}), schedule_fn=stepwise.full_grid_plan,
     description="RDM-k baseline (top-k routing), NFE = T"))
 register(SamplerSpec(
     "mask_predict", "scan", _mask_predict,
     static_nfe=lambda rt, N: rt.steps, knobs=frozenset({"steps"}),
     noise_kinds=frozenset({"absorbing"}),
+    schedule_fn=stepwise.full_grid_plan,
     description="Mask-Predict iterative refinement, NFE = M"))
 register(SamplerSpec(
     "ddim", "scan", _ddim,
     static_nfe=lambda rt, N: -(-rt.steps // rt.ddim_stride),
     knobs=frozenset({"steps", "ddim_stride"}),
     noise_kinds=frozenset({"multinomial"}),
+    schedule_fn=stepwise.ddim_grid_plan,
     description="discrete DDIM baseline, NFE = ceil(T / stride)"))

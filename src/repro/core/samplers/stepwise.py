@@ -1,0 +1,185 @@
+"""Call-schedule-as-data + row-resumable DNDM steps (serving substrate).
+
+DNDM's headline structural property (Thm 3.6 / Alg. 2) is that the whole
+schedule of network calls is knowable *before* sampling starts: sample
+the transition-time set tau at admission and the request's unique-time
+walk, its per-step PRNG keys and its x_T draw are all determined.  This
+module reifies that as data:
+
+* :class:`CallSchedule` — one request's predetermined call schedule
+  (descending times, per-call key stream, tau set, x_T), produced by a
+  per-method ``schedule_fn(key, rt, N)`` registered on the sampler spec.
+  For the host-driven DNDM family the plan reuses ``loop.setup`` with the
+  *same* key-split discipline as the solo samplers, so a request admitted
+  into a rolling batch replays exactly the solo run's randomness.
+* batched **row steps** — jitted step functions that advance every live
+  row of a rolling batch by one entry of *its own* schedule, at its own
+  diffusion time (the denoiser takes per-row ``t_norm``), with its own
+  per-row Gumbel slab.  This is what lets ``ContinuousScheduler`` admit
+  mid-flight and skip the no-op steps a drain batch would pay for.
+
+Bitwise parity with the solo path rests on three audited contracts:
+``decode_tokens`` and ``fused_update`` share the token-selection
+pre-activation (``adjust_logits`` op order, see kernels/dndm_update);
+``jax.random.gumbel(k, (1, N, K))`` equals ``gumbel(k, (N, K))`` under
+broadcasting of the threefry counter grid; and the per-row ``t/T``
+normalization is the same f32 device division the solo step performs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decode
+from repro.core.samplers import loop
+from repro.core.samplers.dndm import quantile_grid
+from repro.core.samplers.dndm_topk import _reveal_topk
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class CallSchedule:
+    """One request's predetermined network-call schedule.
+
+    ``times`` is the descending sequence of diffusion times at which the
+    request calls the network — for Algorithm 1/4 the unique values of
+    its tau set, for the static/baseline methods the compiled grid.
+    ``steps_skipped`` counts the no-op grid steps the predetermined
+    schedule proves it never has to pay for (T - |times|; 0 for
+    continuous-time schedules, where the grid is the request itself).
+    """
+
+    times: np.ndarray                    # descending call times
+    T: int                               # grid size (0 => continuous)
+    tau: np.ndarray | None = None        # (N,) per-token transition times
+    x0: np.ndarray | None = None         # (N,) the request's x_T draw
+    step_keys: np.ndarray | None = None  # (len(times), 2) per-call keys
+
+    @property
+    def nfe(self) -> int:
+        return len(self.times)
+
+    @property
+    def steps_executed(self) -> int:
+        return len(self.times)
+
+    @property
+    def steps_skipped(self) -> int:
+        return max(self.T - len(self.times), 0) if self.T else 0
+
+
+# ------------------------------------------------------------------
+# schedule_fn per method family: (key, rt, N) -> CallSchedule
+# ------------------------------------------------------------------
+
+def dndm_plan(key: jax.Array, rt, N: int) -> CallSchedule:
+    """Admission plan for the host-driven DNDM family (Alg. 1/3/4).
+
+    Replays ``loop.setup`` for a batch of one under the request's key, so
+    (tau, x_T, per-step keys) are bit-identical to what the solo sampler
+    would draw — the scheduler's solo-parity guarantee starts here.
+    """
+    tau, x, k_loop = loop.setup(key, rt.noise, 1, N, dist=rt.dist,
+                                order=rt.order, shared=rt.shared_tau)
+    tau_row = np.asarray(jax.device_get(tau))[0]
+    times = loop.unique_times(tau_row)
+    step_keys = np.asarray(jax.random.split(k_loop, len(times)))
+    return CallSchedule(times=times, T=rt.dist.T, tau=tau_row,
+                        x0=np.asarray(jax.device_get(x))[0],
+                        step_keys=step_keys)
+
+
+def static_grid_plan(key: jax.Array, rt, N: int) -> CallSchedule:
+    """dndm_static / dndm_topk_static: the quantile grid, fixed NFE."""
+    from repro.core.samplers.registry import resolved_budget
+    grid = quantile_grid(rt.dist, resolved_budget(rt, N))
+    return CallSchedule(times=np.asarray(grid)[::-1], T=rt.dist.T)
+
+
+def full_grid_plan(key: jax.Array, rt, N: int) -> CallSchedule:
+    """Ancestral baselines (d3pm, rdm, rdm_k, mask_predict): every step."""
+    return CallSchedule(times=np.arange(rt.steps, 0, -1), T=rt.steps)
+
+
+def ddim_grid_plan(key: jax.Array, rt, N: int) -> CallSchedule:
+    """DDIM subsequence grid: ceil(T / stride) calls."""
+    return CallSchedule(times=np.arange(rt.steps, 0, -rt.ddim_stride),
+                        T=rt.steps)
+
+
+def continuous_plan(key: jax.Array, rt, N: int) -> CallSchedule:
+    """DNDM-C: N continuous timestamps, each its own call (NFE = N)."""
+    tau, _, _ = loop.setup(key, rt.noise, 1, N, dist=rt.cdist,
+                           order=rt.order, shared=rt.shared_tau,
+                           continuous=True)
+    row = np.asarray(jax.device_get(tau))[0]
+    return CallSchedule(times=np.sort(row)[::-1], T=0, tau=row)
+
+
+# ------------------------------------------------------------------
+# batched row steps: advance every live row by one own-schedule entry
+# ------------------------------------------------------------------
+
+def _row_gumbel(keys: Array, shape, x0_mode: str) -> Array | None:
+    """Per-row Gumbel slab: row b drawn from keys[b] alone, bit-identical
+    to the (1, N, K) slab the solo batch-of-one step draws from that key."""
+    if x0_mode == "argmax":
+        return None
+    return jax.vmap(lambda k: jax.random.gumbel(k, shape[1:],
+                                                jnp.float32))(keys)
+
+
+@partial(jax.jit, static_argnames=("denoise_fn", "noise", "cfg", "version",
+                                   "T"))
+def _dndm_rows(x, tau, t_row, keys, cond, *, denoise_fn, noise, cfg,
+               version, T):
+    """One batched network call, each row at its own time t_row[b].
+
+    Token selection goes through ``decode_tokens`` (bitwise-identical to
+    the fused kernel's argmax by the shared pre-activation contract) and
+    the eq. (9) update is applied per row against its own tau set.  Rows
+    whose tau has no entry at t_row[b] (including free/padded rows) pass
+    through unchanged under version 1.
+    """
+    t_norm = t_row.astype(jnp.float32) / T
+    logits = denoise_fn(x, t_norm, cond)
+    g = _row_gumbel(keys, logits.shape, cfg.x0_mode)
+    x0_hat, _ = decode.decode_tokens(None, logits, noise, cfg, gumbel=g)
+    tcol = t_row[:, None].astype(tau.dtype)
+    sel = (tau == tcol) if version == 1 else (tau >= tcol)
+    return jnp.where(sel, x0_hat, x)
+
+
+@partial(jax.jit, static_argnames=("denoise_fn", "noise", "cfg", "T"))
+def _dndm_topk_rows(x, revealed, tau, t_row, keys, cond, *, denoise_fn,
+                    noise, cfg, T):
+    """Algorithm 4's confidence-ranked reveal, row-resumable: K_t is
+    computed per row from that row's tau against that row's time."""
+    t_norm = t_row.astype(jnp.float32) / T
+    logits = denoise_fn(x, t_norm, cond)
+    g = _row_gumbel(keys, logits.shape, cfg.x0_mode)
+    x0_hat, score = decode.decode_tokens(None, logits, noise, cfg, gumbel=g)
+    k_target = jnp.sum(tau >= t_row[:, None].astype(tau.dtype), axis=-1)
+    return _reveal_topk(x, x0_hat, score, revealed, k_target)
+
+
+def dndm_stepwise(version: int):
+    """stepwise_step for dndm (version=1) / dndm2 (version=2)."""
+    def step(state: dict, tau, t_row, keys, cond, rt) -> dict:
+        x = _dndm_rows(state["x"], tau, t_row, keys, cond,
+                       denoise_fn=rt.denoise_fn, noise=rt.noise, cfg=rt.cfg,
+                       version=version, T=rt.dist.T)
+        return {"x": x, "revealed": state["revealed"]}
+    return step
+
+
+def dndm_topk_stepwise(state: dict, tau, t_row, keys, cond, rt) -> dict:
+    x, revealed = _dndm_topk_rows(state["x"], state["revealed"], tau, t_row,
+                                  keys, cond, denoise_fn=rt.denoise_fn,
+                                  noise=rt.noise, cfg=rt.cfg, T=rt.dist.T)
+    return {"x": x, "revealed": revealed}

@@ -15,11 +15,19 @@ def decode_scores_ref(logits, *, mask=None, temperature: float = 1.0,
     sample mode) — the same selection ``dndm_update`` applies, so tokens
     agree bitwise with both ``fused_update`` and the streaming kernel.
     Scores are the log-softmax of the *noise-free* adjusted logits at the
-    chosen token (the confidence the top-k samplers rank on).
+    chosen token (the confidence the top-k samplers rank on), computed
+    with the kernel's exact float association — ``a[tok] - (m + log(s))``
+    with ``m = max(a)``, ``s = sum(exp(a - m))`` — NOT via
+    ``jax.nn.log_softmax`` (which groups as ``(a[tok] - m) - log(s)`` and
+    drifts by an ulp).  Keeping the association in lockstep makes scores,
+    and therefore every confidence-*ranked* trajectory, bitwise equal
+    across backends whenever the vocab fits one kernel tile (K <=
+    block_v; the multi-tile online accumulation is order-dependent).
     """
     a = adjust_logits(logits, mask=mask, temperature=temperature)
     sel = a if gumbel is None else a + gumbel
     tok = sel.argmax(-1).astype(jnp.int32)
-    logp = jax.nn.log_softmax(a, axis=-1)
-    score = jnp.take_along_axis(logp, tok[..., None], axis=-1)[..., 0]
-    return tok, score
+    a_tok = jnp.take_along_axis(a, tok[..., None], axis=-1)[..., 0]
+    m = a.max(-1)
+    s = jnp.exp(a - m[..., None]).sum(-1)
+    return tok, a_tok - (m + jnp.log(s))

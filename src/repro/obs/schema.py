@@ -1,6 +1,6 @@
 """Documented telemetry schemas + zero-dependency validator.
 
-Two artifacts round-trip through this module:
+Three artifacts round-trip through this module:
 
 **BENCH_*.json** (``benchmarks/run.py --json``, schema version 2)::
 
@@ -16,6 +16,23 @@ Two artifacts round-trip through this module:
                    "metrics": {<metric>: {"type": str, "help": str,
                                           "series": [{"labels": {...},
                                                       "value": any}]}}}}
+
+**BENCH_serving.json** (``benchmarks/run.py --serving``, schema
+version 2, tagged ``"kind": "serving"``)::
+
+    {"schema": 2, "kind": "serving", "jax_backend": str, "quick": bool,
+     "config": {"max_batch": int, "seq": int, "steps": int,
+                "requests": int, "method": str, "shared_tau": bool,
+                "arrival_rate_rps": float},
+     "modes": {"drain":      {"wall_seconds": float, "aggregate_nfe": int,
+                              "throughput_rps": float,
+                              "latency_p50_s": float,
+                              "latency_p95_s": float},
+               "continuous": {... same keys ..., "steps_skipped": int,
+                              "admissions_midflight": int}},
+     "comparison": {"nfe_ratio": float, "throughput_ratio": float,
+                    "fewer_nfe": bool, "solo_parity": bool},
+     "telemetry": {... as BENCH ...}}
 
 **REPRO_TRACE JSON-lines** — one object per line, three kinds::
 
@@ -120,6 +137,51 @@ def validate_bench(record: dict) -> None:
                               f"{p}.telemetry.metrics")
 
 
+_MODE_KEYS = ("wall_seconds", "throughput_rps", "latency_p50_s",
+              "latency_p95_s")
+
+
+def validate_serving(record: dict) -> None:
+    """Raise :class:`SchemaError` unless ``record`` is a valid serving
+    benchmark artifact (``benchmarks/run.py --serving``)."""
+    p = "serving"
+    _check(isinstance(record, dict), p, "record must be an object")
+    _check(record.get("schema") == BENCH_SCHEMA_VERSION, p,
+           f"schema={record.get('schema')!r}, want {BENCH_SCHEMA_VERSION}")
+    _check(record.get("kind") == "serving", p,
+           f"kind={record.get('kind')!r}, want 'serving'")
+    _typed(record, p, "jax_backend", str)
+    _typed(record, p, "quick", bool)
+    cfg = _typed(record, p, "config", dict)
+    for k in ("max_batch", "seq", "steps", "requests"):
+        _number(cfg, f"{p}.config", k, minimum=1)
+    _typed(cfg, f"{p}.config", "method", str)
+    _number(cfg, f"{p}.config", "arrival_rate_rps", minimum=0.0)
+    modes = _typed(record, p, "modes", dict)
+    for mode in ("drain", "continuous"):
+        _check(mode in modes, f"{p}.modes", f"missing mode {mode!r}")
+        mp = f"{p}.modes.{mode}"
+        rec = modes[mode]
+        _check(isinstance(rec, dict), mp, "mode record must be an object")
+        for k in _MODE_KEYS:
+            _number(rec, mp, k, minimum=0.0)
+        _number(rec, mp, "aggregate_nfe", minimum=1)
+    cp = f"{p}.comparison"
+    cmp_rec = _typed(record, p, "comparison", dict)
+    _number(cmp_rec, cp, "nfe_ratio", minimum=0.0)
+    _number(cmp_rec, cp, "throughput_ratio", minimum=0.0)
+    _typed(cmp_rec, cp, "fewer_nfe", bool)
+    _typed(cmp_rec, cp, "solo_parity", bool)
+    _number(modes["continuous"], f"{p}.modes.continuous", "steps_skipped",
+            minimum=0)
+    _number(modes["continuous"], f"{p}.modes.continuous",
+            "admissions_midflight", minimum=0)
+    tel = _typed(record, p, "telemetry", dict)
+    _typed(tel, f"{p}.telemetry", "enabled", bool)
+    validate_metrics_snapshot(tel.get("metrics", {}),
+                              f"{p}.telemetry.metrics")
+
+
 def validate_trace_lines(lines: Iterable[str]) -> list[dict]:
     """Structural check of a JSON-lines trace; returns parsed records."""
     out: list[dict] = []
@@ -181,9 +243,15 @@ def main(argv: list[str]) -> int:
     try:
         with open(argv[0]) as f:
             record = json.load(f)
-        validate_bench(record)
-        print(f"ok: {argv[0]} valid (schema {BENCH_SCHEMA_VERSION}, "
-              f"{len(record['methods'])} methods)")
+        if record.get("kind") == "serving":
+            validate_serving(record)
+            print(f"ok: {argv[0]} valid serving record (schema "
+                  f"{BENCH_SCHEMA_VERSION}, "
+                  f"{len(record['modes'])} modes)")
+        else:
+            validate_bench(record)
+            print(f"ok: {argv[0]} valid (schema {BENCH_SCHEMA_VERSION}, "
+                  f"{len(record['methods'])} methods)")
         if len(argv) == 2:
             with open(argv[1]) as f:
                 records = validate_trace_lines(f)

@@ -1,5 +1,9 @@
-"""Serving substrate: generation engine + request batching."""
-from repro.serving.engine import EngineConfig, GenerationEngine
-from repro.serving.scheduler import BatchScheduler, Request
+"""Serving substrate: generation engine + request batching (drain-mode
+and continuous NFE-aware)."""
+from repro.serving.engine import (EngineConfig, GenerationEngine,
+                                  StepwiseRunner)
+from repro.serving.scheduler import (BatchScheduler, ContinuousScheduler,
+                                     Request)
 
-__all__ = ["EngineConfig", "GenerationEngine", "BatchScheduler", "Request"]
+__all__ = ["EngineConfig", "GenerationEngine", "StepwiseRunner",
+           "BatchScheduler", "ContinuousScheduler", "Request"]

@@ -16,6 +16,8 @@ import dataclasses
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 from repro.core import decode as decode_lib
@@ -23,6 +25,7 @@ from repro.core import schedules as sched_lib
 from repro.core import transition as trans_lib
 from repro.core.noise import NoiseDist
 from repro.core.samplers import SamplerConfig, SamplerOutput, registry
+from repro.core.samplers.stepwise import CallSchedule
 from repro.models.model import Model
 
 
@@ -152,6 +155,27 @@ class GenerationEngine:
                        cache=cache, backend=backend)
         return out, wall
 
+    def plan_request(self, key, N: int,
+                     method: str | None = None) -> CallSchedule:
+        """The request's predetermined call schedule, known at admission.
+
+        DNDM's structural claim as an API: sampling the transition-time
+        set under ``key`` determines every network call the request will
+        ever make (times, per-call key stream, x_T) before sampling
+        starts.  The continuous scheduler calls this at ``submit()``.
+        """
+        m = method or self.cfg.method
+        spec = self.check_method(m)
+        if spec.schedule_fn is None:
+            raise ValueError(f"{m} does not expose a call schedule")
+        return spec.schedule_fn(key, self.runtime(), N)
+
+    def stepwise(self, rows: int, N: int,
+                 method: str | None = None) -> "StepwiseRunner":
+        """A row-resumable runner: ``rows`` independent request slots of
+        length ``N``, advanced one own-schedule step per batched call."""
+        return StepwiseRunner(self, method or self.cfg.method, rows, N)
+
     def _run(self, key, spec, m: str, rt, batch: int, N: int, cond):
         """Dispatch one request; returns (out, steady wall, hit|miss)."""
         ck = self._cache_key(m, batch, N, rt, cond)
@@ -200,3 +224,111 @@ class GenerationEngine:
                 else "engine.jit_cache.hits")
         obs.counter(name).inc(method=m, kind=spec.kind)
         return out, wall, ("miss" if missed else "hit")
+
+
+class StepwiseRunner:
+    """Fixed-shape rolling batch of row-resumable requests.
+
+    ``rows`` slots share one compiled batched step; each occupied slot
+    carries a request's :class:`CallSchedule` and a pointer into it.
+    Every :meth:`step` is ONE network call that advances *every* live row
+    by one entry of its own schedule — rows sit at different diffusion
+    times (the denoiser takes per-row ``t_norm``) and draw their noise
+    from their own per-request key stream, so each request's trajectory
+    is bit-for-bit the solo batch-of-one run under the same key stream.
+    Free slots pass through untouched (time sentinel T+1 matches no tau),
+    and a slot is re-admittable the moment its request completes —
+    mid-flight admission costs nothing but an ``.at[row].set``.
+
+    Completed rows are harvested *inside* :meth:`step` (returned as
+    ``{row: tokens}``) before any later call can touch the buffer, so
+    results are exactly-once by construction.
+    """
+
+    def __init__(self, engine: GenerationEngine, method: str, rows: int,
+                 N: int):
+        spec = engine.check_method(method)
+        if spec.stepwise_step is None:
+            raise ValueError(
+                f"{method} has no stepwise step; stepwise-capable methods: "
+                f"{', '.join(n for n in registry.names() if registry.get(n).stepwise_step)}")
+        self.engine = engine
+        self.method = method
+        self.spec = spec
+        self.rt = engine.runtime()
+        self.rows = rows
+        self.N = N
+        self._t_free = self.rt.dist.T + 1       # matches no tau entry
+        self.x = jnp.zeros((rows, N), jnp.int32)
+        self.revealed = jnp.zeros((rows, N), bool)
+        self.tau = jnp.zeros((rows, N), jnp.int32)
+        self._plans: list[CallSchedule | None] = [None] * rows
+        self._ptr = [0] * rows
+        self.calls = 0                          # batched network calls
+
+    def free_rows(self) -> list[int]:
+        return [i for i in range(self.rows) if self._plans[i] is None]
+
+    def active_rows(self) -> list[int]:
+        return [i for i in range(self.rows) if self._plans[i] is not None]
+
+    def admit(self, row: int, plan: CallSchedule) -> None:
+        """Install a request's plan into a free slot (any step boundary)."""
+        self.admit_many([(row, plan)])
+
+    def admit_many(self, pairs: list[tuple[int, CallSchedule]]) -> None:
+        """Install several plans with ONE scatter per buffer — the per-op
+        dispatch cost of ``.at[row].set`` dominates admission otherwise."""
+        if not pairs:
+            return
+        for row, plan in pairs:
+            if self._plans[row] is not None:
+                raise ValueError(f"row {row} is occupied")
+            if (plan.x0 is None or plan.step_keys is None
+                    or plan.tau is None):
+                raise ValueError("stepwise admission needs a full plan "
+                                 "(tau, x0, step_keys) — see dndm_plan")
+        idx = jnp.asarray([row for row, _ in pairs], jnp.int32)
+        x0 = np.stack([np.asarray(p.x0, np.int32).reshape(self.N)
+                       for _, p in pairs])
+        tau = np.stack([np.asarray(p.tau, np.int32).reshape(self.N)
+                        for _, p in pairs])
+        self.x = self.x.at[idx].set(jnp.asarray(x0))
+        self.revealed = self.revealed.at[idx].set(False)
+        self.tau = self.tau.at[idx].set(jnp.asarray(tau))
+        for row, plan in pairs:
+            self._plans[row] = plan
+            self._ptr[row] = 0
+
+    def step(self) -> dict[int, np.ndarray]:
+        """One batched network call; returns tokens of rows that finished."""
+        active = self.active_rows()
+        if not active:
+            return {}
+        t_row = np.full((self.rows,), self._t_free, np.int32)
+        keys = np.zeros((self.rows, 2), np.uint32)
+        for i in active:
+            plan = self._plans[i]
+            t_row[i] = plan.times[self._ptr[i]]
+            keys[i] = plan.step_keys[self._ptr[i]]
+        state = self.spec.stepwise_step(
+            {"x": self.x, "revealed": self.revealed},
+            self.tau, jnp.asarray(t_row), jnp.asarray(keys), None, self.rt)
+        self.x, self.revealed = state["x"], state["revealed"]
+        self.calls += 1
+        if obs.enabled():
+            obs.counter("engine.stepwise_calls").inc(method=self.method)
+        done: dict[int, np.ndarray] = {}
+        finished = [i for i in active
+                    if self._ptr[i] + 1 == len(self._plans[i].times)]
+        if finished:
+            # one transfer of the whole buffer: cheaper than per-row
+            # device slices, and the sync point keeps the dispatch queue
+            # shallow on CPU
+            host_x = np.asarray(jax.device_get(self.x))
+        for i in active:
+            self._ptr[i] += 1
+            if self._ptr[i] == len(self._plans[i].times):
+                done[i] = host_x[i].copy()
+                self._plans[i] = None
+        return done

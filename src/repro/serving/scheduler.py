@@ -1,25 +1,38 @@
-"""Request scheduler: batches async generation requests.
+"""Request schedulers: drain-mode batching and continuous NFE-aware batching.
 
-Requests (each: target length + optional source prefix + optional sampler
-method) are grouped into fixed-shape batches so the jitted samplers are
-reused across requests — the serving-throughput path of deliverable (b).
-The batch dimension is padded up to a power-of-two bucket (capped at
-``max_batch``) before hitting the engine, so queues of different sizes
-within a bucket share one compiled sampler instead of retracing per
-distinct queue length; results are sliced back per request.  Methods are
-validated against the sampler registry; requests naming different
-methods are batched separately so each batch hits one compiled sampler.
+Two schedulers share the :class:`Request` record and the engine:
+
+* :class:`BatchScheduler` — drain mode: requests are grouped by method
+  into fixed-shape power-of-two buckets and each batch runs a whole
+  sampler trajectory before the next batch starts.  Simple, but a
+  request arriving one step after a batch launches waits out the whole
+  batch, and with independent per-request tau sets the batch walks the
+  *union* of every row's transition times — rows pay NFE for steps where
+  they do not transition.
+* :class:`ContinuousScheduler` — continuous mode: ``submit()`` samples
+  the request's predetermined call schedule (``engine.plan_request``, the
+  DNDM structural property as an API), and a rolling
+  :class:`~repro.serving.engine.StepwiseRunner` batch admits requests at
+  any step boundary into free rows.  Every batched call advances each
+  live row by one entry of *its own* schedule, so no row ever pays for a
+  step where it has no transition — per-request NFE stays at the solo
+  ``|unique tau|`` while the batch stays full.
+
+Methods are validated against the sampler registry at submit time;
+requests naming different methods are batched separately so each batch
+hits one compiled sampler.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.serving.engine import GenerationEngine
+from repro.serving.engine import GenerationEngine, StepwiseRunner
 
 
 @dataclasses.dataclass
@@ -33,6 +46,18 @@ class Request:
     wall: float = 0.0                       # amortized share of batch_wall
     batch_wall: float = 0.0                 # wall-clock of the whole batch
     batch_size: int = 0                     # requests served in that batch
+    # lifecycle timestamps (time.time()): queue latency = t_admit -
+    # t_submit, service time = t_done - t_admit
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_done: float = 0.0
+    # continuous mode: the per-request key + predetermined call schedule
+    # (set at submit) — replaying engine.generate(key, 1, N, method=...)
+    # solo reproduces this request's tokens
+    key: jax.Array | None = None
+    plan: object | None = None
+    steps_executed: int = 0
+    steps_skipped: int = 0
 
 
 class BatchScheduler:
@@ -57,7 +82,9 @@ class BatchScheduler:
         method = method or self.engine.cfg.method
         self.engine.check_method(method)
         self._rid += 1
-        self.queue.append(Request(self._rid, length, prefix, method))
+        req = Request(self._rid, length, prefix, method)
+        req.t_submit = time.time()
+        self.queue.append(req)
         return self._rid
 
     def batch_bucket(self, n: int) -> int:
@@ -69,18 +96,21 @@ class BatchScheduler:
             b *= 2
         return min(b, self.max_batch)
 
-    def _bucket(self) -> list[Request]:
-        """Up to max_batch requests sharing the head request's method."""
-        m0 = self.queue[0].method
-        take: list[Request] = []
-        rest: list[Request] = []
+    def _buckets(self) -> list[list[Request]]:
+        """Split the queue into per-method FIFO batches of up to
+        ``max_batch``, one grouping pass over the queue (methods keep
+        first-arrival order).  Replaces the per-pop whole-queue rescan
+        that made a mixed-method drain O(n^2)."""
+        order: list[str] = []
+        groups: dict[str, list[Request]] = {}
         for r in self.queue:
-            if len(take) < self.max_batch and r.method == m0:
-                take.append(r)
-            else:
-                rest.append(r)
-        self.queue = rest
-        return take
+            if r.method not in groups:
+                groups[r.method] = []
+                order.append(r.method)
+            groups[r.method].append(r)
+        self.queue = []
+        return [groups[m][i:i + self.max_batch] for m in order
+                for i in range(0, len(groups[m]), self.max_batch)]
 
     def run(self) -> dict[int, Request]:
         """Drain the queue; returns completed requests by id.
@@ -91,10 +121,11 @@ class BatchScheduler:
         its members, so attributing the full wall-clock to every request
         would overcount serving cost by the batch size.
         """
-        while self.queue:
+        pending = len(self.queue)
+        for batch in self._buckets():
             if obs.enabled():
-                obs.gauge("scheduler.queue_depth").set(len(self.queue))
-            batch = self._bucket()
+                obs.gauge("scheduler.queue_depth").set(pending)
+            pending -= len(batch)
             # pad the batch dim to the compiled bucket; padded rows are
             # generated (wasted work bounded by 2x) and sliced off below
             B = self.batch_bucket(len(batch))
@@ -108,6 +139,7 @@ class BatchScheduler:
                     pre[i, P - len(r.prefix):] = r.prefix
                 cond = {"prefix_tokens": jnp.asarray(pre)}
             self._key, k = jax.random.split(self._key)
+            t_admit = time.time()
             with obs.span("scheduler.batch", method=m, requests=len(batch),
                           bucket=B) as sp:
                 out, wall = self.engine.generate(k, B, N, cond=cond,
@@ -126,11 +158,163 @@ class BatchScheduler:
                            occupancy=len(batch) / B)
             toks = np.asarray(jax.device_get(out.tokens))
             share = wall / len(batch)
+            t_done = time.time()
             for i, r in enumerate(batch):
                 r.result = toks[i, : r.length]
                 r.nfe = out.nfe
                 r.wall = share
                 r.batch_wall = wall
                 r.batch_size = len(batch)
+                r.t_admit = t_admit
+                r.t_done = t_done
+                if obs.enabled():
+                    obs.histogram("scheduler.queue_latency_seconds").observe(
+                        t_admit - r.t_submit, mode="drain")
+                    obs.histogram("scheduler.service_seconds").observe(
+                        t_done - t_admit, mode="drain")
                 self.done[r.rid] = r
+        return self.done
+
+
+class ContinuousScheduler:
+    """Continuous NFE-aware batching over a rolling stepwise batch.
+
+    ``submit()`` samples the request's predetermined call schedule
+    immediately (``engine.plan_request`` under a per-request key), so the
+    scheduler knows every network call the request will make before it is
+    admitted.  A :class:`~repro.serving.engine.StepwiseRunner` holds up
+    to ``max_batch`` in-flight rows; :meth:`pump` admits queued requests
+    into free rows at the current step boundary (no drain barrier) and
+    issues one batched network call advancing every live row along its
+    own schedule.  Steps outside a request's schedule are never executed
+    for it — per-request ``steps_skipped`` (= T - |unique tau|) counts
+    the no-op grid steps the predetermined schedule proved unnecessary,
+    and the batch-level call count is ``max`` over the cohort's schedule
+    lengths instead of drain mode's ``|union|``.
+
+    Per-request results are bit-for-bit the solo
+    ``engine.generate(request.key, 1, N, method=...)`` run whenever the
+    denoiser is batch-shape-invariant, and exactly reproducible from
+    ``request.key`` regardless (same tau set, same per-step key stream;
+    see ``samplers/stepwise.py`` for the parity contract).
+
+    Scope: unconditional requests, one method per rolling batch (the
+    runner switches methods only when it empties — mixed-method queues
+    are served in arrival order of their method group).  Conditional
+    (prefix) requests still go through :class:`BatchScheduler`.
+    """
+
+    def __init__(self, engine: GenerationEngine, max_batch: int = 8,
+                 bucket_len: int = 64, seed: int = 0):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.bucket_len = bucket_len
+        self.queue: list[Request] = []
+        self.done: dict[int, Request] = {}
+        self._rid = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._runners: dict[str, StepwiseRunner] = {}
+        self._current: str | None = None
+        self._row_req: dict[int, Request] = {}      # live row -> request
+        self.total_calls = 0        # aggregate NFE: batched network calls
+
+    def submit(self, length: int, method: str | None = None) -> int:
+        """Enqueue a request; its call schedule is sampled *now*."""
+        if length > self.bucket_len:
+            raise ValueError(f"length {length} > bucket_len "
+                             f"{self.bucket_len}")
+        method = method or self.engine.cfg.method
+        spec = self.engine.check_method(method)
+        if spec.stepwise_step is None:
+            raise ValueError(
+                f"{method} does not support continuous batching "
+                "(no stepwise_step); submit it to BatchScheduler instead")
+        self._rid += 1
+        r = Request(self._rid, length, method=method)
+        r.key = jax.random.fold_in(self._key, self._rid)
+        r.plan = self.engine.plan_request(r.key, self.bucket_len, method)
+        r.t_submit = time.time()
+        self.queue.append(r)
+        return self._rid
+
+    def _runner(self, method: str) -> StepwiseRunner:
+        if method not in self._runners:
+            self._runners[method] = self.engine.stepwise(
+                self.max_batch, self.bucket_len, method)
+        return self._runners[method]
+
+    def _admit(self) -> None:
+        """Move queued requests of the current method into free rows."""
+        runner = self._runner(self._current)
+        free = runner.free_rows()
+        if not free:
+            return
+        midflight = bool(runner.active_rows())
+        take: list[Request] = []
+        rest: list[Request] = []
+        for r in self.queue:        # one pass, FIFO within the method
+            if r.method == self._current and len(take) < len(free):
+                take.append(r)
+            else:
+                rest.append(r)
+        self.queue = rest
+        placed = list(zip(free, take))
+        runner.admit_many([(row, r.plan) for row, r in placed])
+        t_admit = time.time()
+        for row, r in placed:
+            self._row_req[row] = r
+            r.t_admit = t_admit
+            if obs.enabled():
+                obs.histogram("scheduler.queue_latency_seconds").observe(
+                    r.t_admit - r.t_submit, mode="continuous")
+                if midflight:
+                    obs.counter("scheduler.admissions_midflight").inc(
+                        method=r.method)
+
+    def pump(self) -> bool:
+        """Admit what fits, then issue ONE batched network call.
+
+        Returns True while work remains (queued or in flight).  Drive it
+        from a serving loop interleaved with ``submit()`` calls; ``run()``
+        below pumps to completion for synchronous use.
+        """
+        if self._current is not None:
+            runner = self._runners.get(self._current)
+            if (runner is None or not runner.active_rows()) and not any(
+                    r.method == self._current for r in self.queue):
+                self._current = None    # batch drained, group exhausted
+        if self._current is None:
+            if not self.queue:
+                return False
+            self._current = self.queue[0].method
+        self._admit()
+        runner = self._runner(self._current)
+        if obs.enabled():
+            obs.gauge("scheduler.queue_depth").set(len(self.queue))
+            obs.histogram("scheduler.occupancy").observe(
+                len(runner.active_rows()) / runner.rows,
+                method=self._current)
+        finished = runner.step()
+        self.total_calls += 1
+        t_done = time.time()
+        for row, toks in finished.items():
+            r = self._row_req.pop(row)
+            r.result = toks[: r.length]
+            r.nfe = r.plan.nfe
+            r.steps_executed = r.plan.steps_executed
+            r.steps_skipped = r.plan.steps_skipped
+            r.t_done = t_done
+            if obs.enabled():
+                obs.counter("scheduler.steps_skipped").inc(
+                    r.steps_skipped, method=r.method)
+                obs.counter("scheduler.requests").inc(method=r.method)
+                obs.histogram("scheduler.service_seconds").observe(
+                    t_done - r.t_admit, mode="continuous")
+            self.done[r.rid] = r
+        return bool(self.queue or self._row_req)
+
+    def run(self) -> dict[int, Request]:
+        """Pump to completion; returns completed requests by id."""
+        while self.pump():
+            pass
         return self.done

@@ -116,3 +116,96 @@ def test_mesh_helpers():
     m = FakeMesh({"pod": 2, "data": 16, "model": 16})
     assert batch_axes(m) == ("pod", "data")
     assert axis_size(m, "pod", "data") == 32
+
+
+# ---------------------------------------------------------------------
+# Transition-law conformance (ISSUE 8): the sampled transition-time
+# marginals must match the analytic laws of the paper.
+#
+# Tolerance rationale (all seeds fixed, so every run sees the same
+# draws — thresholds guard against *implementation* drift, not luck):
+#
+# * chi-square: with the law correct the statistic is asymptotically
+#   chi2 with dof = (#bins - 1), mean dof and sd sqrt(2 dof).  We accept
+#   up to dof + 4 sd — one-sided false-alarm ~3e-5 were the seed free —
+#   while an off-by-one in the time indexing (mass shifted by one bin)
+#   moves the statistic by O(n/T), orders of magnitude past it.
+# * KS: the Kolmogorov critical value is sqrt(-ln(a/2)/2)/sqrt(n);
+#   a = 1e-4 gives 2.22/sqrt(n).  We add 2e-3 slack for the trapezoid
+#   quadrature error of the scipy-free _beta_cdf oracle.
+# ---------------------------------------------------------------------
+from repro.core import schedules, transition
+from repro.core.transition import _beta_cdf
+
+
+def _chi_square(counts: np.ndarray, expected: np.ndarray,
+                min_expected: float = 8.0) -> tuple[float, int]:
+    """Pearson statistic with small-expectation bins pooled (the chi2
+    approximation needs every expected count above a handful)."""
+    stat, dof, o_acc, e_acc = 0.0, 0, 0.0, 0.0
+    for o, e in zip(counts, expected):
+        o_acc += o
+        e_acc += e
+        if e_acc >= min_expected:
+            stat += (o_acc - e_acc) ** 2 / e_acc
+            dof += 1
+            o_acc = e_acc = 0.0
+    if e_acc > 0:       # fold the remainder into the last pooled bin
+        stat += (o_acc - e_acc) ** 2 / max(e_acc, min_expected)
+        dof += 1
+    return stat, dof - 1
+
+
+def test_thm36_finite_t_marginal_chi_square():
+    """Theorem 3.6: P(tau = t) = alpha_{t-1} - alpha_t.  The categorical
+    sampler must reproduce exactly the schedule's transition_probs."""
+    T, n = 50, 20_000
+    dist = transition.from_schedule(schedules.linear(T))
+    tau = np.asarray(dist.sample(jax.random.PRNGKey(0), (n,)))
+    assert tau.min() >= 1 and tau.max() <= T
+    counts = np.bincount(tau, minlength=T + 1)[1:].astype(float)
+    stat, dof = _chi_square(counts, n * dist.probs)
+    assert stat < dof + 4 * np.sqrt(2 * dof), (stat, dof)
+
+
+def test_beta_approx_marginal_chi_square():
+    """beta_approx discretizes Beta(a, b) by CDF differencing at the bin
+    edges k/T (paper §3.2) and samples the resulting categorical: the
+    analytic bin masses are F(k/T) - F((k-1)/T), recomputed here from
+    the quadrature CDF independently of the TransitionDist internals."""
+    T, a, b, n = 40, 15.0, 7.0, 20_000
+    dist = transition.beta_approx(T, a, b)
+    tau = np.asarray(dist.sample(jax.random.PRNGKey(1), (n,)))
+    assert tau.min() >= 1 and tau.max() <= T
+    counts = np.bincount(tau, minlength=T + 1)[1:].astype(float)
+    expected = np.diff(_beta_cdf(np.arange(T + 1) / T, a, b))
+    stat, dof = _chi_square(counts, n * expected)
+    assert stat < dof + 4 * np.sqrt(2 * dof), (stat, dof)
+
+
+def test_continuous_beta_ks():
+    """DNDM-C timestamps: sample_continuous ~ Beta(a, b) on (0, 1]."""
+    a, b, n = 15.0, 7.0, 4_000
+    cdist = transition.beta_continuous(a, b)
+    x = np.sort(np.asarray(
+        cdist.sample_continuous(jax.random.PRNGKey(2), (n,))))
+    F = _beta_cdf(x, a, b)
+    ecdf_hi = np.arange(1, n + 1) / n
+    ks = max(np.abs(ecdf_hi - F).max(), np.abs(F - (ecdf_hi - 1 / n)).max())
+    assert ks < 2.22 / np.sqrt(n) + 2e-3, ks
+
+
+def test_continuous_from_discrete_law_ks():
+    """A probs-backed law samples continuous times by inverse-CDF on the
+    grid plus uniform within-bin jitter: the CDF is the piecewise-linear
+    interpolant of cumsum(probs) at the bin edges t/T."""
+    T, n = 50, 4_000
+    dist = transition.from_schedule(schedules.cosine(T))
+    x = np.sort(np.asarray(
+        dist.sample_continuous(jax.random.PRNGKey(3), (n,))))
+    knots_x = np.arange(T + 1) / T
+    knots_F = np.concatenate([[0.0], np.cumsum(dist.probs)])
+    F = np.interp(x, knots_x, knots_F)
+    ecdf_hi = np.arange(1, n + 1) / n
+    ks = max(np.abs(ecdf_hi - F).max(), np.abs(F - (ecdf_hi - 1 / n)).max())
+    assert ks < 2.22 / np.sqrt(n) + 2e-3, ks

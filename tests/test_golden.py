@@ -1,0 +1,113 @@
+"""Golden-trajectory regression fixtures (ISSUE 8).
+
+Small fixed-seed generations for one sampler per family — dndm (host
+loop), dndm_topk (confidence-ranked reveal), rdm (scan baseline), ddim
+(multinomial subsequence baseline) — are checked into
+``tests/golden/trajectories.json`` together with their NFE and (for
+plan-capable methods) the predetermined call schedule.  Replaying them
+pins the whole decode path: a sampler refactor that silently changes
+tokens, NFE accounting, or the tau sampling fails here first.
+
+The fixtures are recorded on the CPU reference decode backend under the
+pinned CI jax version; regenerate intentionally with::
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_golden.py
+
+(the test then rewrites the fixture and passes — diff it in review).
+"""
+import json
+import os
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import decode as decode_lib
+from repro.models import Model, ModelConfig
+from repro.serving import EngineConfig, GenerationEngine
+
+VOCAB, SEQ, STEPS, BATCH = 12, 8, 6, 2
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "trajectories.json"
+REGEN = os.environ.get("REPRO_REGEN_GOLDEN", "") == "1"
+
+# (method, noise_kind, engine knobs) — one per sampler family
+CASES = [
+    ("dndm", "absorbing", {}),
+    ("dndm_topk", "absorbing", {}),
+    ("rdm", "absorbing", {}),
+    ("ddim", "multinomial", {"ddim_stride": 2}),
+]
+
+pytestmark = pytest.mark.skipif(
+    decode_lib.default_backend() != "reference",
+    reason="golden fixtures are recorded on the reference decode backend")
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cfg = ModelConfig(name="golden", arch_type="dense", n_layers=1,
+                      d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+                      vocab_size=VOCAB, block_pattern=("attn",),
+                      bidirectional=True)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    out = {}
+    for _, kind, _ in CASES:
+        if kind not in out:
+            out[kind] = GenerationEngine(model, params, EngineConfig(
+                method="dndm" if kind == "absorbing" else "ddim",
+                steps=STEPS, noise_kind=kind, shared_tau=False,
+                ddim_stride=2))
+    return out
+
+
+def _generate(engines):
+    rec = {"jax": jax.__version__,
+           "config": {"vocab": VOCAB, "seq": SEQ, "steps": STEPS,
+                      "batch": BATCH},
+           "trajectories": {}}
+    for method, kind, _ in CASES:
+        eng = engines[kind]
+        key = jax.random.PRNGKey(42)
+        out, _ = eng.generate(key, BATCH, SEQ, method=method)
+        entry = {"tokens": np.asarray(out.tokens).tolist(),
+                 "nfe": int(out.nfe)}
+        if eng.check_method(method).schedule_fn is not None:
+            plan = eng.plan_request(key, SEQ, method)
+            entry["call_times"] = np.asarray(plan.times).tolist()
+        rec["trajectories"][method] = entry
+    return rec
+
+
+def test_golden_trajectories(engines):
+    got = _generate(engines)
+    if REGEN or not GOLDEN.exists():
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+        if not REGEN:
+            pytest.skip("golden fixture recorded; re-run to compare")
+        return
+    want = json.loads(GOLDEN.read_text())
+    if want["jax"] != jax.__version__:
+        pytest.skip(f"fixture recorded under jax {want['jax']}, running "
+                    f"{jax.__version__} — REPRO_REGEN_GOLDEN=1 to re-pin")
+    assert got["config"] == want["config"]
+    for method, entry in want["trajectories"].items():
+        g = got["trajectories"][method]
+        assert g["nfe"] == entry["nfe"], method
+        assert g["tokens"] == entry["tokens"], (
+            f"{method}: tokens drifted from the golden fixture — if the "
+            "change is intentional, REPRO_REGEN_GOLDEN=1 and review the "
+            "diff")
+        if "call_times" in entry:
+            assert g["call_times"] == entry["call_times"], method
+
+
+def test_golden_covers_every_family():
+    """The fixture must keep one method per sampler family (host DNDM,
+    ranked reveal, scan baseline, multinomial baseline)."""
+    if not GOLDEN.exists():
+        pytest.skip("fixture not recorded yet")
+    want = json.loads(GOLDEN.read_text())
+    assert set(want["trajectories"]) == {m for m, _, _ in CASES}
