@@ -59,6 +59,13 @@ def main() -> None:
         from benchmarks.baseline import emit
         emit(path, quick=QUICK)
         return
+    if "--serving-registry" in argv:
+        # full-registry serving leg: every registered method through the
+        # drain and continuous schedulers (see benchmarks/serving.py)
+        path = _out_path(argv, "--serving-registry")
+        from benchmarks.serving import emit_registry
+        emit_registry(path, quick=QUICK)
+        return
     if "--serving" in argv:
         # Poisson-arrival serving benchmark: drain vs continuous batching
         # (see benchmarks/serving.py; "kind": "serving" schema-2 JSON)

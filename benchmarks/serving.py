@@ -20,7 +20,11 @@ arrival tape and the minimum-wall run is reported, filtering OS
 scheduling jitter out of the sub-second walls.
 
 ``python -m benchmarks.run --serving BENCH_serving.json`` (the CI
-``serving`` leg runs this on CPU).
+``serving`` leg runs this on CPU).  ``--serving-registry`` runs
+:func:`emit_registry` instead: the same drain-vs-continuous drive with
+requests cycling over EVERY method in the sampler registry (a second
+multinomial engine covers the ddim remainder), witnessing that the whole
+registry serves through ``ContinuousScheduler``.
 """
 from __future__ import annotations
 
@@ -54,13 +58,15 @@ def _percentiles(done) -> dict:
             "latency_p95_s": round(float(np.percentile(lat, 95)), 6)}
 
 
-def _drive(sched, arrivals, lengths, pump: bool):
+def _drive(sched, arrivals, lengths, pump: bool, methods=None):
     """Feed the arrival process in wall-clock time; returns wall seconds.
 
     Drain mode runs a full queue drain whenever work is queued (a batch
     launched now cannot admit later arrivals — the latency cost under
     measurement); continuous mode issues one batched step per loop
-    iteration, admitting whatever has arrived by then.
+    iteration, admitting whatever has arrived by then.  ``methods``
+    optionally cycles request i onto ``methods[i % len(methods)]`` (the
+    full-registry leg); None keeps the engine's configured method.
     """
     n = len(arrivals)
     i = 0
@@ -68,7 +74,9 @@ def _drive(sched, arrivals, lengths, pump: bool):
     while len(sched.done) < n:
         now = time.time() - t0
         while i < n and arrivals[i] <= now:
-            sched.submit(int(lengths[i]))
+            sched.submit(int(lengths[i]),
+                         method=methods[i % len(methods)] if methods
+                         else None)
             i += 1
         if pump:
             busy = sched.pump()
@@ -93,11 +101,16 @@ def _aggregate_nfe_drain(done) -> int:
     return agg
 
 
-def _solo_parity(eng, done, check: int = 3) -> bool:
+def _solo_parity(eng, done, check: int = 3, methods=None) -> bool:
     """Continuous-mode acceptance: replaying a request's key solo must
-    reproduce its tokens (batch-shape-invariance caveats aside, dndm's
-    argmax decode is robust — checked bitwise here)."""
-    for r in list(done.values())[:check]:
+    reproduce its tokens.  ``methods`` restricts the spot-check to the
+    argmax-decode DNDM family on mixed-method workloads — bitwise parity
+    under a *real* transformer needs batch-shape-robust decoding (the
+    score-*ranked* methods are covered bitwise by the elementwise-model
+    tests in tests/test_scheduler.py)."""
+    reqs = [r for r in done.values()
+            if methods is None or r.method in methods]
+    for r in reqs[:check]:
         solo, _ = eng.generate(r.key, 1, common.SEQ, method=r.method)
         if not (np.asarray(solo.tokens)[0][: r.length] == r.result).all():
             return False
@@ -204,5 +217,157 @@ def emit(path: str, quick: bool = True) -> dict:
     print(f"# serving benchmark written to {path}: "
           f"nfe {c['aggregate_nfe']} vs {d['aggregate_nfe']} (drain), "
           f"throughput x{record['comparison']['throughput_ratio']}, "
+          f"parity={record['comparison']['solo_parity']}", flush=True)
+    return record
+
+
+REPEATS_REGISTRY = 2    # coverage leg: correctness first, min-wall of 2
+
+
+def _mid_total(methods) -> int:
+    c = obs.counter("scheduler.admissions_midflight")
+    return int(sum(c.value(method=m) for m in methods))
+
+
+def emit_registry(path: str, quick: bool = True) -> dict:
+    """Full-registry serving leg (``--serving-registry``).
+
+    The same Poisson drain-vs-continuous drive as :func:`emit`, but the
+    arrival tape cycles requests over *every* method the sampler registry
+    exposes for the engine's noise kind; ddim (multinomial-only) rides a
+    second tiny engine so ``registry.names()`` is covered exactly.  The
+    record is the standard schema-2 ``"kind": "serving"`` artifact with
+    ``config.method = "registry"`` plus a ``coverage`` map (method ->
+    requests completed in continuous mode); completion of every method is
+    enforced here, not just measured.
+    """
+    obs.enable()
+    steps = 12 if quick else 32
+    model, params, _ = common.unconditional_model()
+    eng = common.engine(model, params, method=METHOD, steps=steps,
+                        shared_tau=False, nfe_budget=6, ddim_stride=2)
+    methods = list(common.available_methods("absorbing"))
+    m_model, m_params, _ = common.unconditional_model(
+        noise_kind="multinomial")
+    m_eng = common.engine(m_model, m_params, method="ddim", steps=steps,
+                          noise_kind="multinomial", shared_tau=False,
+                          nfe_budget=6, ddim_stride=2)
+    m_methods = [m for m in common.available_methods("multinomial")
+                 if m not in methods]
+    if sorted(methods + m_methods) != list(common.available_methods()):
+        raise RuntimeError("registry leg does not cover every method")
+
+    # warm the compiled shapes out of the measured window: the rolling
+    # stepwise batch per method + the drain buckets the cohorts will hit
+    for sched_eng, ms in ((eng, methods), (m_eng, m_methods)):
+        warm_c = ContinuousScheduler(sched_eng, max_batch=MAX_BATCH,
+                                     bucket_len=common.SEQ, seed=99)
+        warm_d = BatchScheduler(sched_eng, max_batch=MAX_BATCH,
+                                bucket_len=common.SEQ, seed=98)
+        for m in ms:
+            warm_c.submit(common.SEQ, method=m)
+            for _ in range(2):
+                warm_d.submit(common.SEQ, method=m)
+        warm_c.run()
+        warm_d.run()
+
+    key = jax.random.PRNGKey(0)
+    out, wall = eng.generate(jax.random.fold_in(key, 17), MAX_BATCH,
+                             common.SEQ)
+    per_call = wall / max(out.nfe, 1)
+    e_nfe = eng.runtime().dist.expected_nfe(common.SEQ)
+    rate = OCCUPANCY * MAX_BATCH / (e_nfe * per_call)
+    n_abs = (2 if quick else 4) * len(methods)
+    n_rest = (1 if quick else 2) * len(m_methods)
+    arrivals, lengths = _workload(n_abs, rate, seed=5)
+    m_arrivals, m_lengths = _workload(max(n_rest, 1), rate, seed=6)
+
+    drain = wall_d = None
+    cont = wall_c = midflight = None
+    for _ in range(REPEATS_REGISTRY):
+        d1 = BatchScheduler(eng, max_batch=MAX_BATCH,
+                            bucket_len=common.SEQ, seed=1)
+        w = _drive(d1, arrivals, lengths, pump=False, methods=methods)
+        d2 = BatchScheduler(m_eng, max_batch=MAX_BATCH,
+                            bucket_len=common.SEQ, seed=2)
+        w += _drive(d2, m_arrivals, m_lengths, pump=False,
+                    methods=m_methods)
+        if wall_d is None or w < wall_d:
+            drain, wall_d = (d1, d2), w
+
+        mid0 = _mid_total(methods + m_methods)
+        c1 = ContinuousScheduler(eng, max_batch=MAX_BATCH,
+                                 bucket_len=common.SEQ, seed=1)
+        w = _drive(c1, arrivals, lengths, pump=True, methods=methods)
+        c2 = ContinuousScheduler(m_eng, max_batch=MAX_BATCH,
+                                 bucket_len=common.SEQ, seed=2)
+        w += _drive(c2, m_arrivals, m_lengths, pump=True,
+                    methods=m_methods)
+        mid = _mid_total(methods + m_methods) - mid0
+        if wall_c is None or w < wall_c:
+            cont, wall_c, midflight = (c1, c2), w, mid
+
+    cont_reqs = [r for s in cont for r in s.done.values()]
+    coverage: dict[str, int] = {}
+    for r in cont_reqs:
+        coverage[r.method] = coverage.get(r.method, 0) + 1
+    missing = set(common.available_methods()) - set(coverage)
+    if missing:
+        raise RuntimeError(f"continuous mode failed to serve: {missing}")
+
+    n_requests = n_abs + max(n_rest, 1)
+    record: dict = {
+        "schema": 2,
+        "kind": "serving",
+        "jax_backend": jax.default_backend(),
+        "quick": quick,
+        "config": {"max_batch": MAX_BATCH, "seq": common.SEQ,
+                   "steps": steps, "requests": n_requests,
+                   "method": "registry",
+                   "methods": sorted(coverage),
+                   "shared_tau": False,
+                   "arrival_rate_rps": round(float(rate), 3)},
+        "coverage": coverage,
+        "modes": {},
+    }
+    drain_reqs = [r for s in drain for r in s.done.values()]
+    record["modes"]["drain"] = {
+        "wall_seconds": round(wall_d, 4),
+        "aggregate_nfe": sum(_aggregate_nfe_drain(s.done) for s in drain),
+        "throughput_rps": round(n_requests / wall_d, 3),
+        **_percentiles({i: r for i, r in enumerate(drain_reqs)}),
+    }
+    record["modes"]["continuous"] = {
+        "wall_seconds": round(wall_c, 4),
+        "aggregate_nfe": sum(s.total_calls for s in cont),
+        "throughput_rps": round(n_requests / wall_c, 3),
+        "steps_skipped": int(sum(r.steps_skipped for r in cont_reqs)),
+        "admissions_midflight": int(midflight),
+        **_percentiles({i: r for i, r in enumerate(cont_reqs)}),
+    }
+    d, c = record["modes"]["drain"], record["modes"]["continuous"]
+    record["comparison"] = {
+        "nfe_ratio": round(c["aggregate_nfe"] / max(d["aggregate_nfe"], 1),
+                           4),
+        "throughput_ratio": round(c["throughput_rps"]
+                                  / max(d["throughput_rps"], 1e-9), 4),
+        "fewer_nfe": bool(c["aggregate_nfe"] < d["aggregate_nfe"]),
+        "solo_parity": (_solo_parity(eng, cont[0].done,
+                                     methods=("dndm", "dndm2"))
+                        and _solo_parity(m_eng, cont[1].done,
+                                         methods=("dndm", "dndm2"))),
+    }
+    record["telemetry"] = {
+        "enabled": obs.enabled(),
+        "trace": obs.tracing.sink_path(),
+        "metrics": obs.snapshot(),
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    obs.write_metrics_record()
+    print(f"# registry serving benchmark written to {path}: "
+          f"{len(coverage)} methods served continuously, "
+          f"nfe {c['aggregate_nfe']} vs {d['aggregate_nfe']} (drain), "
           f"parity={record['comparison']['solo_parity']}", flush=True)
     return record

@@ -40,6 +40,18 @@ class NoiseDist:
             return jnp.full((self.vocab_size,), 1.0 / self.vocab_size, dtype)
         return jax.nn.one_hot(self.mask_id, self.vocab_size, dtype=dtype)
 
+    @property
+    def pad_id(self) -> int:
+        """Token id used to left-pad short conditioning prefixes in a
+        mixed-length batch.  Absorbing diffusion has a reserved non-signal
+        token — [MASK] — which is the only id a prefix pad may use without
+        conditioning the row on spurious content; multinomial has no
+        reserved id, so 0 is kept for lack of anything better (documented
+        in the scheduler)."""
+        if self.kind == "absorbing":
+            return self.mask_id
+        return 0
+
     def logit_mask(self, dtype=jnp.float32) -> Array:
         """Additive mask that forbids predicting the noise-only token.
 

@@ -98,7 +98,15 @@ def sample(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
 
 
 def quantile_grid(dist: TransitionDist, nfe_budget: int) -> np.ndarray:
-    """Grid times = D_tau quantiles (equal transition mass per call)."""
+    """Grid times = D_tau quantiles (equal transition mass per call).
+
+    Strictly increasing: when the budget exceeds the number of distinct
+    quantile times (small T or concentrated D_tau) the repeats are
+    dropped — a duplicated grid time would make the static scan visit t
+    twice and re-sample every token with ``tau_b == t``, breaking the
+    "revealed exactly once" invariant.  ``len(grid) <= nfe_budget`` is
+    therefore the actual NFE of the static samplers.
+    """
     probs = dist.probs
     if probs is None:
         raise ValueError("need a discretized D_tau")
@@ -107,7 +115,7 @@ def quantile_grid(dist: TransitionDist, nfe_budget: int) -> np.ndarray:
     # smallest t with P(tau <= t) >= q  (cdf[t] indexes times directly)
     grid = np.searchsorted(cdf, qs - 1e-12)
     grid = np.clip(grid, 1, dist.T).astype(np.int32)     # times 1..T
-    return np.maximum.accumulate(grid)
+    return np.unique(np.maximum.accumulate(grid))
 
 
 def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
@@ -128,7 +136,7 @@ def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
 
     tau, x, k_loop = loop.setup(key, noise, batch, N, dist=dist,
                                 order=order, shared=shared_tau)
-    idx = jnp.clip(jnp.searchsorted(grid_j, tau), 0, nfe_budget - 1)
+    idx = jnp.clip(jnp.searchsorted(grid_j, tau), 0, len(grid) - 1)
     tau_b = grid_j[idx]                                  # bucketized tau
 
     def step(x, t, k):
@@ -138,7 +146,7 @@ def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
                                    version=version)
 
     x = loop.scan_loop(k_loop, grid_j[::-1].astype(jnp.float32), x, step)
-    return SamplerOutput(tokens=x, nfe=nfe_budget,
+    return SamplerOutput(tokens=x, nfe=len(grid),
                          aux={"tau": tau, "grid": grid})
 
 

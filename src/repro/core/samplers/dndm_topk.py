@@ -108,7 +108,7 @@ def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
     tau, x, k_loop = loop.setup(key, noise, batch, N, dist=dist,
                                 order=order, shared=shared_tau)
     # bucketize up to the grid so the last scanned time covers every token
-    idx = jnp.clip(jnp.searchsorted(grid, tau), 0, nfe_budget - 1)
+    idx = jnp.clip(jnp.searchsorted(grid, tau), 0, len(grid) - 1)
     tau_b = grid[idx]
     revealed = jnp.zeros((batch, N), bool)
 
@@ -123,4 +123,4 @@ def sample_static(key: jax.Array, denoise_fn: DenoiseFn, noise: NoiseDist,
     ts = grid[::-1].astype(jnp.float32)
     x, revealed = loop.scan_loop(k_loop, ts, (x, revealed), step)
     # final sweep guarantee: any token still unrevealed gets the last pred
-    return SamplerOutput(tokens=x, nfe=nfe_budget, aux={"tau": tau})
+    return SamplerOutput(tokens=x, nfe=len(grid), aux={"tau": tau})

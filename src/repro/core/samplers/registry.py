@@ -61,7 +61,12 @@ class SamplerSpec:
     ``stepwise_step(state, tau, t_row, keys, cond, rt) -> state`` is the
     opt-in for continuous batching: a jitted batched step advancing each
     row by one entry of its own schedule (see ``samplers/stepwise.py``);
-    methods without one are served drain-mode only.
+    every built-in provides one, so the whole registry serves through
+    ``ContinuousScheduler`` — methods registered without one fall back
+    to drain-mode only.  ``continuous_time`` marks methods whose call
+    times are real timestamps in (0, 1] (the DNDM-C family): the
+    stepwise runner then keeps f32 time/tau buffers and parks free rows
+    at 2.0 instead of T + 1.
     """
 
     name: str
@@ -73,6 +78,7 @@ class SamplerSpec:
     description: str = ""
     schedule_fn: Callable[..., Any] | None = None  # (key, rt, N) -> plan
     stepwise_step: Callable[..., Any] | None = None
+    continuous_time: bool = False
 
 
 _REGISTRY: dict[str, SamplerSpec] = {}
@@ -190,6 +196,12 @@ def _ddim(key, rt, batch, N, cond):
                        stride=rt.ddim_stride, cond=cond, cfg=rt.cfg)
 
 
+def _static_grid_nfe(rt: SamplerRuntime, N: int) -> int:
+    """Actual NFE of the static-quantile variants: the deduped grid can
+    be shorter than the requested budget (small T / concentrated D_tau)."""
+    return len(dndm.quantile_grid(rt.dist, resolved_budget(rt, N)))
+
+
 _TAU = frozenset({"order", "shared_tau", "beta"})
 
 register(SamplerSpec(
@@ -208,40 +220,48 @@ register(SamplerSpec(
     stepwise_step=stepwise.dndm_topk_stepwise,
     description="Algorithm 4: confidence-ranked reveal, same NFE as Alg 1"))
 register(SamplerSpec(
-    "dndm_static", "scan", _dndm_static, static_nfe=resolved_budget,
+    "dndm_static", "scan", _dndm_static, static_nfe=_static_grid_nfe,
     knobs=_TAU | {"nfe_budget"},
     schedule_fn=stepwise.static_grid_plan,
+    stepwise_step=stepwise.dndm_stepwise(1),
     description="quantile-bucketized Alg 1: one compiled scan, fixed NFE"))
 register(SamplerSpec(
     "dndm_topk_static", "scan", _dndm_topk_static,
-    static_nfe=resolved_budget, knobs=_TAU | {"nfe_budget"},
+    static_nfe=_static_grid_nfe, knobs=_TAU | {"nfe_budget"},
     schedule_fn=stepwise.static_grid_plan,
+    stepwise_step=stepwise.dndm_topk_stepwise,
     description="quantile-bucketized Alg 4: one compiled scan, fixed NFE"))
 register(SamplerSpec(
     "dndm_c", "scan", _dndm_c(False), static_nfe=lambda rt, N: N,
     knobs=_TAU, schedule_fn=stepwise.continuous_plan,
+    stepwise_step=stepwise.dndm_c_stepwise(False), continuous_time=True,
     description="Algorithm 2: continuous time, NFE = N"))
 register(SamplerSpec(
     "dndm_c_topk", "scan", _dndm_c(True), static_nfe=lambda rt, N: N,
     knobs=_TAU, schedule_fn=stepwise.continuous_plan,
+    stepwise_step=stepwise.dndm_c_stepwise(True), continuous_time=True,
     description="Algorithm 2 + confidence-ranked reveal, NFE = N"))
 register(SamplerSpec(
     "d3pm", "scan", _d3pm, static_nfe=lambda rt, N: rt.steps,
     knobs=frozenset({"steps"}), schedule_fn=stepwise.full_grid_plan,
+    stepwise_step=stepwise.d3pm_stepwise,
     description="D3PM ancestral baseline, NFE = T"))
 register(SamplerSpec(
     "rdm", "scan", _rdm(False), static_nfe=lambda rt, N: rt.steps,
     knobs=frozenset({"steps"}), schedule_fn=stepwise.full_grid_plan,
+    stepwise_step=stepwise.rdm_stepwise(False),
     description="RDM baseline (uniform routing), NFE = T"))
 register(SamplerSpec(
     "rdm_k", "scan", _rdm(True), static_nfe=lambda rt, N: rt.steps,
     knobs=frozenset({"steps"}), schedule_fn=stepwise.full_grid_plan,
+    stepwise_step=stepwise.rdm_stepwise(True),
     description="RDM-k baseline (top-k routing), NFE = T"))
 register(SamplerSpec(
     "mask_predict", "scan", _mask_predict,
     static_nfe=lambda rt, N: rt.steps, knobs=frozenset({"steps"}),
     noise_kinds=frozenset({"absorbing"}),
     schedule_fn=stepwise.full_grid_plan,
+    stepwise_step=stepwise.mask_predict_stepwise,
     description="Mask-Predict iterative refinement, NFE = M"))
 register(SamplerSpec(
     "ddim", "scan", _ddim,
@@ -249,4 +269,5 @@ register(SamplerSpec(
     knobs=frozenset({"steps", "ddim_stride"}),
     noise_kinds=frozenset({"multinomial"}),
     schedule_fn=stepwise.ddim_grid_plan,
+    stepwise_step=stepwise.ddim_stepwise,
     description="discrete DDIM baseline, NFE = ceil(T / stride)"))

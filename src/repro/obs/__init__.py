@@ -22,13 +22,13 @@ import os
 
 from repro.obs import metrics, tracing
 from repro.obs.metrics import (counter, disable, enable, enabled, gauge,
-                               histogram, reset, snapshot)
+                               histogram, reset, snapshot, suppressed)
 from repro.obs.tracing import (event, maybe_jax_profile, set_sink, span,
                                summary, write_metrics_record)
 
 __all__ = [
     "counter", "gauge", "histogram", "snapshot", "reset",
-    "enable", "disable", "enabled",
+    "enable", "disable", "enabled", "suppressed",
     "span", "event", "summary", "set_sink", "write_metrics_record",
     "maybe_jax_profile", "metrics", "tracing", "configure_from_env",
 ]

@@ -1,12 +1,14 @@
 """Process-wide metrics registry: counters, gauges, histograms — labeled.
 
 Zero-dependency and **disabled by default**: every record method opens
-with a single ``if not _ENABLED: return`` guard, so with telemetry off
-the cost of an instrumented call site is one module-global read (no
-label-dict construction, no allocation, verified by
-``tests/test_obs.py::test_disabled_path_overhead``).  Enable with
+with a single ``if not _ENABLED or _SUPPRESSED: return`` guard, so with
+telemetry off the cost of an instrumented call site is one short-circuited
+module-global read (no label-dict construction, no allocation, verified
+by ``tests/test_obs.py::test_disabled_path_overhead``).  Enable with
 :func:`enable` or by setting ``REPRO_METRICS=1`` / ``REPRO_TRACE=...``
-in the environment (read once when ``repro.obs`` is imported).
+in the environment (read once when ``repro.obs`` is imported); silence a
+re-executed computation without flipping the global with
+:func:`suppressed`.
 
 Instruments are created lazily by name (``counter(name)`` is
 get-or-create; name collisions across types raise) and accept arbitrary
@@ -24,13 +26,31 @@ as such in ARCHITECTURE.md.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 
 _ENABLED = False
+_SUPPRESSED = 0
 
 
 def enabled() -> bool:
-    return _ENABLED
+    return _ENABLED and not _SUPPRESSED
+
+
+@contextlib.contextmanager
+def suppressed():
+    """Temporarily silence every instrument (and, via the shared
+    ``enabled()`` gate, trace spans/events) without touching the global
+    on/off state.  For work that re-executes an already-measured
+    computation — e.g. the engine's untimed host-sampler warm-up run —
+    where recording would double-count real serving metrics.  Reentrant;
+    not thread-local (the repo's schedulers are single-threaded)."""
+    global _SUPPRESSED
+    _SUPPRESSED += 1
+    try:
+        yield
+    finally:
+        _SUPPRESSED -= 1
 
 
 def enable() -> None:
@@ -69,7 +89,7 @@ class Counter(_Instrument):
     kind = "counter"
 
     def inc(self, value: float = 1, **labels) -> None:
-        if not _ENABLED:
+        if not _ENABLED or _SUPPRESSED:
             return
         k = _labels_key(labels)
         self.series[k] = self.series.get(k, 0) + value
@@ -82,7 +102,7 @@ class Gauge(_Instrument):
     kind = "gauge"
 
     def set(self, value, **labels) -> None:
-        if not _ENABLED:
+        if not _ENABLED or _SUPPRESSED:
             return
         self.series[_labels_key(labels)] = value
 
@@ -98,7 +118,7 @@ class Histogram(_Instrument):
     kind = "histogram"
 
     def observe(self, value: float, **labels) -> None:
-        if not _ENABLED:
+        if not _ENABLED or _SUPPRESSED:
             return
         k = _labels_key(labels)
         s = self.series.get(k)

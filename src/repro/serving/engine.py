@@ -170,11 +170,14 @@ class GenerationEngine:
             raise ValueError(f"{m} does not expose a call schedule")
         return spec.schedule_fn(key, self.runtime(), N)
 
-    def stepwise(self, rows: int, N: int,
-                 method: str | None = None) -> "StepwiseRunner":
+    def stepwise(self, rows: int, N: int, method: str | None = None,
+                 prefix_len: int = 0) -> "StepwiseRunner":
         """A row-resumable runner: ``rows`` independent request slots of
-        length ``N``, advanced one own-schedule step per batched call."""
-        return StepwiseRunner(self, method or self.cfg.method, rows, N)
+        length ``N``, advanced one own-schedule step per batched call.
+        ``prefix_len > 0`` makes it a conditional runner — every admitted
+        request must carry a prefix of exactly that length."""
+        return StepwiseRunner(self, method or self.cfg.method, rows, N,
+                              prefix_len=prefix_len)
 
     def _run(self, key, spec, m: str, rt, batch: int, N: int, cond):
         """Dispatch one request; returns (out, steady wall, hit|miss)."""
@@ -189,8 +192,13 @@ class GenerationEngine:
             warm_wall = 0.0
             if missed:
                 tc = time.time()
-                warm = spec.run(key, rt, batch, N, cond)
-                jax.block_until_ready(warm.tokens)
+                # the warm-up re-executes the exact run measured below;
+                # recording it would double-count sampler.step events,
+                # step/reveal histograms and decode.* counters on every
+                # jit-cache miss, so obs is suppressed for its duration
+                with obs.suppressed():
+                    warm = spec.run(key, rt, batch, N, cond)
+                    jax.block_until_ready(warm.tokens)
                 warm_wall = time.time() - tc
                 self._host_warm.add(ck)
             t0 = time.time()
@@ -236,9 +244,19 @@ class StepwiseRunner:
     times (the denoiser takes per-row ``t_norm``) and draw their noise
     from their own per-request key stream, so each request's trajectory
     is bit-for-bit the solo batch-of-one run under the same key stream.
-    Free slots pass through untouched (time sentinel T+1 matches no tau),
-    and a slot is re-admittable the moment its request completes —
-    mid-flight admission costs nothing but an ``.at[row].set``.
+    Free slots pass through untouched (parked at a sentinel time outside
+    every schedule — T+1 on a discrete grid, 2.0 in continuous time —
+    and additionally gated out inside every row step), and a slot is
+    re-admittable the moment its request completes — mid-flight
+    admission costs nothing but an ``.at[row].set``.
+
+    ``prefix_len > 0`` makes the runner conditional: it keeps a
+    ``(rows, prefix_len)`` prefix buffer fed to the denoiser as
+    ``cond={"prefix_tokens": ...}`` and every admission must supply a
+    prefix of exactly that length (the continuous scheduler groups
+    conditional traffic by (method, prefix length), so rows are never
+    padded and per-row solo parity is preserved).  Free rows hold the
+    noise pad token.
 
     Completed rows are harvested *inside* :meth:`step` (returned as
     ``{row: tokens}``) before any later call can touch the buffer, so
@@ -246,7 +264,7 @@ class StepwiseRunner:
     """
 
     def __init__(self, engine: GenerationEngine, method: str, rows: int,
-                 N: int):
+                 N: int, prefix_len: int = 0):
         spec = engine.check_method(method)
         if spec.stepwise_step is None:
             raise ValueError(
@@ -258,10 +276,17 @@ class StepwiseRunner:
         self.rt = engine.runtime()
         self.rows = rows
         self.N = N
-        self._t_free = self.rt.dist.T + 1       # matches no tau entry
+        self.prefix_len = prefix_len
+        if spec.continuous_time:
+            # timestamps live in (0, 1]; 2.0 is past every schedule
+            self._t_dtype, self._t_free = np.float32, 2.0
+        else:
+            self._t_dtype, self._t_free = np.int32, self.rt.dist.T + 1
         self.x = jnp.zeros((rows, N), jnp.int32)
         self.revealed = jnp.zeros((rows, N), bool)
-        self.tau = jnp.zeros((rows, N), jnp.int32)
+        self.tau = jnp.zeros((rows, N), jnp.dtype(self._t_dtype))
+        self.prefix = (jnp.full((rows, prefix_len), engine.noise.pad_id,
+                                jnp.int32) if prefix_len else None)
         self._plans: list[CallSchedule | None] = [None] * rows
         self._ptr = [0] * rows
         self.calls = 0                          # batched network calls
@@ -272,30 +297,50 @@ class StepwiseRunner:
     def active_rows(self) -> list[int]:
         return [i for i in range(self.rows) if self._plans[i] is not None]
 
-    def admit(self, row: int, plan: CallSchedule) -> None:
+    def admit(self, row: int, plan: CallSchedule,
+              prefix: np.ndarray | None = None) -> None:
         """Install a request's plan into a free slot (any step boundary)."""
-        self.admit_many([(row, plan)])
+        self.admit_many([(row, plan)],
+                        None if prefix is None else [prefix])
 
-    def admit_many(self, pairs: list[tuple[int, CallSchedule]]) -> None:
+    def admit_many(self, pairs: list[tuple[int, CallSchedule]],
+                   prefixes: list[np.ndarray] | None = None) -> None:
         """Install several plans with ONE scatter per buffer — the per-op
-        dispatch cost of ``.at[row].set`` dominates admission otherwise."""
+        dispatch cost of ``.at[row].set`` dominates admission otherwise.
+
+        Plans must carry (x0, step_keys); ``tau`` is additionally
+        required for the tau-consuming methods (the DNDM family) and
+        ignored by the schedule-driven baselines (``tau=None`` plans).
+        ``prefixes`` (aligned with ``pairs``) is required iff the runner
+        was built with ``prefix_len > 0``.
+        """
         if not pairs:
             return
+        if bool(prefixes) != bool(self.prefix_len):
+            raise ValueError(
+                "conditional runner needs one prefix per admission"
+                if self.prefix_len else
+                "unconditional runner cannot admit prefixes")
         for row, plan in pairs:
             if self._plans[row] is not None:
                 raise ValueError(f"row {row} is occupied")
-            if (plan.x0 is None or plan.step_keys is None
-                    or plan.tau is None):
+            if plan.x0 is None or plan.step_keys is None:
                 raise ValueError("stepwise admission needs a full plan "
-                                 "(tau, x0, step_keys) — see dndm_plan")
+                                 "(x0, step_keys) — see samplers/stepwise")
         idx = jnp.asarray([row for row, _ in pairs], jnp.int32)
         x0 = np.stack([np.asarray(p.x0, np.int32).reshape(self.N)
                        for _, p in pairs])
-        tau = np.stack([np.asarray(p.tau, np.int32).reshape(self.N)
-                        for _, p in pairs])
+        tau = np.stack([
+            np.zeros(self.N, self._t_dtype) if p.tau is None
+            else np.asarray(p.tau, self._t_dtype).reshape(self.N)
+            for _, p in pairs])
         self.x = self.x.at[idx].set(jnp.asarray(x0))
         self.revealed = self.revealed.at[idx].set(False)
         self.tau = self.tau.at[idx].set(jnp.asarray(tau))
+        if self.prefix_len:
+            pre = np.stack([np.asarray(p, np.int32).reshape(self.prefix_len)
+                            for p in prefixes])
+            self.prefix = self.prefix.at[idx].set(jnp.asarray(pre))
         for row, plan in pairs:
             self._plans[row] = plan
             self._ptr[row] = 0
@@ -305,15 +350,17 @@ class StepwiseRunner:
         active = self.active_rows()
         if not active:
             return {}
-        t_row = np.full((self.rows,), self._t_free, np.int32)
+        t_row = np.full((self.rows,), self._t_free, self._t_dtype)
         keys = np.zeros((self.rows, 2), np.uint32)
         for i in active:
             plan = self._plans[i]
             t_row[i] = plan.times[self._ptr[i]]
             keys[i] = plan.step_keys[self._ptr[i]]
+        cond = (None if self.prefix is None
+                else {"prefix_tokens": self.prefix})
         state = self.spec.stepwise_step(
             {"x": self.x, "revealed": self.revealed},
-            self.tau, jnp.asarray(t_row), jnp.asarray(keys), None, self.rt)
+            self.tau, jnp.asarray(t_row), jnp.asarray(keys), cond, self.rt)
         self.x, self.revealed = state["x"], state["revealed"]
         self.calls += 1
         if obs.enabled():

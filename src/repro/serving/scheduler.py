@@ -133,8 +133,13 @@ class BatchScheduler:
             m = batch[0].method
             cond = None
             if batch[0].prefix is not None:
+                # left-pad short prefixes with the noise pad token ([MASK]
+                # for absorbing) — padding with 0, a real vocab token,
+                # would condition the row on spurious content.  A row's
+                # reference run is therefore solo generation with the
+                # same pad-extended prefix.
                 P = max(len(r.prefix) for r in batch)
-                pre = np.zeros((B, P), np.int32)
+                pre = np.full((B, P), self.engine.noise.pad_id, np.int32)
                 for i, r in enumerate(batch):
                     pre[i, P - len(r.prefix):] = r.prefix
                 cond = {"prefix_tokens": jnp.asarray(pre)}
@@ -198,10 +203,15 @@ class ContinuousScheduler:
     ``request.key`` regardless (same tau set, same per-step key stream;
     see ``samplers/stepwise.py`` for the parity contract).
 
-    Scope: unconditional requests, one method per rolling batch (the
-    runner switches methods only when it empties — mixed-method queues
-    are served in arrival order of their method group).  Conditional
-    (prefix) requests still go through :class:`BatchScheduler`.
+    Requests are grouped by (method, prefix length) — every registered
+    method has a stepwise step, and conditional (prefix) requests get a
+    conditional runner per exact prefix length, so prefixes are never
+    padded inside a rolling batch and the solo-parity contract holds for
+    them too.  Groups with work are served **round-robin** (one pump
+    each, in first-arrival order of the group): a steady stream of one
+    method can never starve queued requests of another — a group with
+    work waits at most ``#groups-with-work - 1`` pumps for its next
+    batched call.
     """
 
     def __init__(self, engine: GenerationEngine, max_batch: int = 8,
@@ -213,12 +223,15 @@ class ContinuousScheduler:
         self.done: dict[int, Request] = {}
         self._rid = 0
         self._key = jax.random.PRNGKey(seed)
-        self._runners: dict[str, StepwiseRunner] = {}
-        self._current: str | None = None
-        self._row_req: dict[int, Request] = {}      # live row -> request
+        # group = (method, prefix_len); 0 = unconditional
+        self._runners: dict[tuple, StepwiseRunner] = {}
+        self._rotation: list[tuple] = []    # groups in first-seen order
+        self._rr = 0                        # round-robin cursor
+        self._row_req: dict[tuple, Request] = {}  # (group, row) -> request
         self.total_calls = 0        # aggregate NFE: batched network calls
 
-    def submit(self, length: int, method: str | None = None) -> int:
+    def submit(self, length: int, prefix: np.ndarray | None = None,
+               method: str | None = None) -> int:
         """Enqueue a request; its call schedule is sampled *now*."""
         if length > self.bucket_len:
             raise ValueError(f"length {length} > bucket_len "
@@ -230,39 +243,49 @@ class ContinuousScheduler:
                 f"{method} does not support continuous batching "
                 "(no stepwise_step); submit it to BatchScheduler instead")
         self._rid += 1
-        r = Request(self._rid, length, method=method)
+        if prefix is not None:
+            prefix = np.asarray(prefix, np.int32).reshape(-1)
+        r = Request(self._rid, length, prefix, method)
         r.key = jax.random.fold_in(self._key, self._rid)
         r.plan = self.engine.plan_request(r.key, self.bucket_len, method)
         r.t_submit = time.time()
         self.queue.append(r)
         return self._rid
 
-    def _runner(self, method: str) -> StepwiseRunner:
-        if method not in self._runners:
-            self._runners[method] = self.engine.stepwise(
-                self.max_batch, self.bucket_len, method)
-        return self._runners[method]
+    @staticmethod
+    def _group(r: Request) -> tuple:
+        return (r.method, 0 if r.prefix is None else len(r.prefix))
 
-    def _admit(self) -> None:
-        """Move queued requests of the current method into free rows."""
-        runner = self._runner(self._current)
+    def _runner(self, group: tuple) -> StepwiseRunner:
+        if group not in self._runners:
+            method, prefix_len = group
+            self._runners[group] = self.engine.stepwise(
+                self.max_batch, self.bucket_len, method,
+                prefix_len=prefix_len)
+        return self._runners[group]
+
+    def _admit(self, group: tuple) -> None:
+        """Move queued requests of ``group`` into its free rows."""
+        runner = self._runner(group)
         free = runner.free_rows()
         if not free:
             return
         midflight = bool(runner.active_rows())
         take: list[Request] = []
         rest: list[Request] = []
-        for r in self.queue:        # one pass, FIFO within the method
-            if r.method == self._current and len(take) < len(free):
+        for r in self.queue:        # one pass, FIFO within the group
+            if self._group(r) == group and len(take) < len(free):
                 take.append(r)
             else:
                 rest.append(r)
         self.queue = rest
         placed = list(zip(free, take))
-        runner.admit_many([(row, r.plan) for row, r in placed])
+        runner.admit_many(
+            [(row, r.plan) for row, r in placed],
+            [r.prefix for _, r in placed] if group[1] else None)
         t_admit = time.time()
         for row, r in placed:
-            self._row_req[row] = r
+            self._row_req[(group, row)] = r
             r.t_admit = t_admit
             if obs.enabled():
                 obs.histogram("scheduler.queue_latency_seconds").observe(
@@ -271,34 +294,52 @@ class ContinuousScheduler:
                     obs.counter("scheduler.admissions_midflight").inc(
                         method=r.method)
 
+    def _next_group(self) -> tuple | None:
+        """The next group with work, round-robin from the cursor.
+
+        Work = live rows in the group's runner or queued requests of the
+        group.  New groups join the rotation in first-arrival order; the
+        cursor only ever advances one served group at a time, so no group
+        with work is passed over twice before every other one is served
+        — the fairness bound a steady single-method stream used to
+        violate by pinning the old ``self._current`` forever.
+        """
+        for r in self.queue:
+            g = self._group(r)
+            if g not in self._rotation:
+                self._rotation.append(g)
+        n = len(self._rotation)
+        for off in range(n):
+            g = self._rotation[(self._rr + off) % n]
+            runner = self._runners.get(g)
+            if ((runner is not None and runner.active_rows())
+                    or any(self._group(r) == g for r in self.queue)):
+                self._rr = (self._rr + off + 1) % n
+                return g
+        return None
+
     def pump(self) -> bool:
-        """Admit what fits, then issue ONE batched network call.
+        """Serve ONE group: admit what fits, issue one batched call.
 
         Returns True while work remains (queued or in flight).  Drive it
         from a serving loop interleaved with ``submit()`` calls; ``run()``
         below pumps to completion for synchronous use.
         """
-        if self._current is not None:
-            runner = self._runners.get(self._current)
-            if (runner is None or not runner.active_rows()) and not any(
-                    r.method == self._current for r in self.queue):
-                self._current = None    # batch drained, group exhausted
-        if self._current is None:
-            if not self.queue:
-                return False
-            self._current = self.queue[0].method
-        self._admit()
-        runner = self._runner(self._current)
+        group = self._next_group()
+        if group is None:
+            return False
+        self._admit(group)
+        runner = self._runner(group)
         if obs.enabled():
             obs.gauge("scheduler.queue_depth").set(len(self.queue))
             obs.histogram("scheduler.occupancy").observe(
                 len(runner.active_rows()) / runner.rows,
-                method=self._current)
+                method=group[0])
         finished = runner.step()
         self.total_calls += 1
         t_done = time.time()
         for row, toks in finished.items():
-            r = self._row_req.pop(row)
+            r = self._row_req.pop((group, row))
             r.result = toks[: r.length]
             r.nfe = r.plan.nfe
             r.steps_executed = r.plan.steps_executed

@@ -169,8 +169,9 @@ def test_dndm_generate_records_reveal_series(telemetry, tiny, key):
     assert gen[0]["attrs"]["cache"] == "miss"
     assert gen[0]["attrs"]["backend"] in ("pallas", "interpret", "reference")
     step_reveals = [r["attrs"]["reveal"] for r in steps]
-    # warm-up + timed run both walk the same predetermined series
-    assert step_reveals == list(map(float, expect)) * 2
+    # the untimed jit warm-up run is obs-suppressed, so the series shows
+    # up exactly once — not doubled by the cache-miss warm-up replay
+    assert step_reveals == list(map(float, expect))
 
 
 # ------------------------------------------------------------------
@@ -193,6 +194,54 @@ def test_host_warmup_split(telemetry, tiny, key):
     # warm-up reruns the same PRNG key: outputs identical
     assert (np.asarray(out.tokens) == np.asarray(out2.tokens)).all()
     assert wall >= 0 and wall2 >= 0
+
+
+def test_suppressed_silences_without_flipping_global(telemetry):
+    """obs.suppressed(): instruments and events are silenced inside the
+    context (enabled() reads False), the global on-state is untouched,
+    and nesting unwinds correctly."""
+    c = obs.counter("suppress.probe")
+    c.inc()
+    with obs.suppressed():
+        assert not obs.enabled()
+        c.inc()
+        obs.event("suppress.nope")
+        with obs.suppressed():
+            c.inc()
+        c.inc()                     # still inside the outer context
+    assert obs.enabled()
+    c.inc()
+    assert c.value() == 2
+    assert all(r["name"] != "suppress.nope"
+               for r in obs.tracing.records())
+
+
+def test_cold_warm_metric_equality(telemetry, tiny, key):
+    """Regression (cold-key double counting): a jit-cache-miss host call
+    runs the sampler twice (untimed warm-up + timed run) but must record
+    each per-step metric exactly once — the same counts a warm call
+    records.  Pre-fix, every cold call double-counted sampler.step
+    events, step/reveal histograms and decode.* counters."""
+    eng = _engine(tiny, "dndm")
+
+    def emission_counts():
+        h_step = obs.histogram("sampler.step_seconds").value(loop="host")
+        h_rev = obs.histogram("sampler.reveal_count").value(
+            sampler="dndm", version=1)
+        steps = sum(1 for r in obs.tracing.records()
+                    if r["kind"] == "event" and r["name"] == "sampler.step")
+        return ((h_step or {"count": 0})["count"],
+                (h_rev or {"count": 0})["count"], steps)
+
+    out, _ = eng.generate(key, 2, SEQ)          # cold: warm-up + timed
+    cold = emission_counts()
+    obs.metrics.reset()
+    obs.tracing.clear()
+    out2, _ = eng.generate(key, 2, SEQ)         # warm: timed run only
+    warm = emission_counts()
+    assert cold == warm
+    assert cold[0] == out.nfe                   # one step record per call
+    assert (np.asarray(out.tokens) == np.asarray(out2.tokens)).all()
 
 
 def test_scan_cache_counters(telemetry, tiny, key):

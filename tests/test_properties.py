@@ -21,8 +21,10 @@ def test_quantile_grid_properties(T, K):
     dist = transition.from_schedule(schedules.cosine(T))
     K = min(K, T)
     grid = quantile_grid(dist, K)
-    assert len(grid) == K
-    assert np.all(np.diff(grid) >= 0)
+    # deduped: at most K calls, strictly increasing (a repeated time would
+    # make the static scan re-sample every token bucketized onto it)
+    assert 1 <= len(grid) <= K
+    assert np.all(np.diff(grid) > 0)
     assert 1 <= grid[0] and grid[-1] <= T
     cdf = np.cumsum(dist.probs)
     assert cdf[grid[-1] - 1] >= 1.0 - 1e-9

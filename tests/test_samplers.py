@@ -56,6 +56,36 @@ def test_dndm_static_budget(setup, key):
         assert (out.tokens == target).all()
 
 
+def test_static_grid_dedup_no_double_reveal(key):
+    """Regression: with budget > |distinct quantile times| (small T or a
+    concentrated D_tau) the quantile grid used to repeat times; the
+    static scan then walked the duplicate, re-sampling every token
+    bucketized onto it under a fresh step key — a second reveal of an
+    already-revealed token.  The grid is deduped now: the actual NFE is
+    ``len(grid) <= budget`` and any two budgets that dedupe to the same
+    grid are bitwise-identical runs."""
+    dist = transition.from_schedule(schedules.linear(3))
+    nz = noise.absorbing(K)
+
+    def net(x_t, t, cond):      # t-dependent: a re-run step changes tokens
+        k = jnp.arange(K, dtype=jnp.float32)
+        t_ = jnp.asarray(t, jnp.float32).reshape(-1, 1, 1)
+        return jnp.sin(x_t[..., None].astype(jnp.float32) * 0.31
+                       + k * 0.7 + t_ * 1.9) * 3.0
+
+    grids = {b: dndm.quantile_grid(dist, b) for b in (3, 5, 9)}
+    for g in grids.values():
+        assert len(np.unique(g)) == len(g) <= 3
+    np.testing.assert_array_equal(grids[5], grids[9])
+    cfg = SamplerConfig(x0_mode="sample")
+    outs = {b: dndm.sample_static(key, net, nz, dist, B, N, b, cfg=cfg)
+            for b in (5, 9)}
+    for b, out in outs.items():
+        assert out.nfe == len(grids[b]) < b
+    np.testing.assert_array_equal(np.asarray(outs[5].tokens),
+                                  np.asarray(outs[9].tokens))
+
+
 def test_dndm_absorbing_reveals_everything(setup, key):
     """No [MASK] left after a full reverse pass (Alg 1 invariant)."""
     sch, dist, target, oracle = setup

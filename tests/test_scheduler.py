@@ -181,6 +181,160 @@ def test_continuous_midflight_admission_and_metrics(tiny, telemetry):
     assert (("mode", "continuous"),) in svc_modes
 
 
+# ---------------------------------------------------------------------
+# ISSUE 9: continuous batching for the whole registry + the bugs it
+# flushed out (prefix pad token, group starvation, conditional rows)
+# ---------------------------------------------------------------------
+import jax.numpy as jnp
+
+from repro.core.samplers import registry
+
+
+class _ElemCfg:
+    vocab_size = VOCAB
+
+
+class _ElemModel:
+    """Purely elementwise denoiser (row b's logits depend only on row b's
+    tokens/prefix/time), so trajectories are batch-shape-invariant and
+    stepwise-vs-solo parity is exact for every method — including the
+    score-ranked ones a real transformer's ~1e-6 cross-batch logit
+    jitter would perturb."""
+
+    cfg = _ElemCfg()
+
+    def init(self, key):
+        return {}
+
+    def denoise_fn(self, params, _cond=None):
+        def fn(x_t, t, cond):
+            k = jnp.arange(VOCAB, dtype=jnp.float32)
+            n = jnp.arange(x_t.shape[-1], dtype=jnp.float32)
+            t_ = jnp.asarray(t, jnp.float32).reshape(-1, 1, 1)
+            base = jnp.sin(x_t[..., None].astype(jnp.float32) * 0.37
+                           + k * 1.11 + n[None, :, None] * 0.23
+                           + t_ * 2.9) * 4.0
+            if cond is not None:
+                p = cond["prefix_tokens"].astype(jnp.float32)
+                base = base + jnp.cos(p * 0.61).sum(-1)[:, None, None] * 2.0
+            return base
+        return fn
+
+
+def _elem_engine(noise_kind="absorbing"):
+    model = _ElemModel()
+    return GenerationEngine(model, model.init(None), EngineConfig(
+        method="dndm", steps=6, noise_kind=noise_kind, shared_tau=False,
+        nfe_budget=3, ddim_stride=2))
+
+
+def test_every_registered_method_is_stepwise_capable():
+    """Acceptance: the whole registry serves through ContinuousScheduler
+    — every spec carries both a schedule_fn and a stepwise_step."""
+    for name in registry.names():
+        spec = registry.get(name)
+        assert spec.schedule_fn is not None, name
+        assert spec.stepwise_step is not None, name
+
+
+@pytest.mark.parametrize("noise_kind", ["absorbing", "multinomial"])
+def test_stepwise_full_registry_solo_parity(noise_kind):
+    """Every registered method, served through the rolling stepwise
+    batch, reproduces its solo ``engine.generate(key, 1, N)`` run
+    bitwise — rows at different diffusion times, different methods
+    pumped round-robin, mid-flight admissions included."""
+    eng = _elem_engine(noise_kind)
+    methods = registry.names(noise_kind)
+    sched = ContinuousScheduler(eng, max_batch=3, bucket_len=SEQ, seed=7)
+    rids = {m: sched.submit(SEQ, method=m) for m in methods}
+    done = sched.run()
+    assert sorted(done) == sorted(rids.values())
+    for m, rid in rids.items():
+        r = done[rid]
+        solo, _ = eng.generate(r.key, 1, SEQ, method=m)
+        np.testing.assert_array_equal(
+            np.asarray(solo.tokens)[0], np.asarray(r.result),
+            err_msg=f"{m} diverged from its solo replay")
+        assert r.nfe == len(r.plan.times)
+
+
+def test_stepwise_conditional_rows_solo_parity():
+    """Conditional (prefix) requests no longer force drain mode: the
+    continuous scheduler groups them by (method, prefix length) into
+    conditional runners, and each row still reproduces the solo
+    conditional run bitwise (prefixes are never padded in-batch)."""
+    eng = _elem_engine()
+    sched = ContinuousScheduler(eng, max_batch=2, bucket_len=SEQ, seed=9)
+    rng = np.random.default_rng(0)
+    subs = []
+    for m, P in [("dndm", 3), ("rdm_k", 4), ("dndm_topk", 3), ("d3pm", 4)]:
+        pre = rng.integers(0, VOCAB - 1, size=P).astype(np.int32)
+        subs.append((sched.submit(SEQ, prefix=pre, method=m), m, pre))
+    done = sched.run()
+    assert sorted(done) == sorted(rid for rid, _, _ in subs)
+    for rid, m, pre in subs:
+        r = done[rid]
+        solo, _ = eng.generate(r.key, 1, SEQ, method=m,
+                               cond={"prefix_tokens": jnp.asarray(pre)[None]})
+        np.testing.assert_array_equal(
+            np.asarray(solo.tokens)[0], np.asarray(r.result),
+            err_msg=f"conditional {m} (P={len(pre)}) diverged from solo")
+
+
+def test_round_robin_no_group_starvation():
+    """Regression: the old scheduler pinned one "current" method group
+    until its runner fully drained, so a steady single-method arrival
+    stream starved every other group forever.  Groups with work are now
+    served round-robin: under an adversarial steady stream of method A,
+    a queued method-B request still completes within its fairness bound
+    (one B call per rotation => ~2x its schedule length in pumps)."""
+    eng = _elem_engine()
+    sched = ContinuousScheduler(eng, max_batch=2, bucket_len=SEQ, seed=1)
+    sched.submit(SEQ, method="dndm")
+    sched.submit(SEQ, method="dndm")
+    sched.pump()                        # dndm runner is live
+    rid_b = sched.submit(SEQ, method="rdm")
+    n_calls_b = len(sched.queue[-1].plan.times)
+    pumps = 0
+    while rid_b not in sched.done:
+        sched.submit(SEQ, method="dndm")   # keep A's queue non-empty
+        assert sched.pump()
+        pumps += 1
+        assert pumps <= 2 * n_calls_b + 2, "rdm starved by the dndm stream"
+    done = sched.run()                  # drain the adversarial backlog
+    assert sorted(done) == list(range(1, sched._rid + 1))
+
+
+def test_drain_prefix_padded_with_noise_pad_token(tiny, monkeypatch):
+    """Regression: BatchScheduler left-padded short prefixes (and free
+    bucket rows) with token 0 — a real vocab token — conditioning those
+    rows on spurious content.  Mixed-length prefixes must pad with the
+    noise pad token ([MASK] for absorbing diffusion)."""
+    eng = _engine(tiny)
+    assert eng.noise.pad_id == eng.noise.mask_id    # absorbing: [MASK]
+    seen = {}
+    orig = eng.generate
+
+    def spy(key, batch, N, cond=None, method=None):
+        seen["cond"] = cond
+        return orig(key, batch, N, cond=cond, method=method)
+
+    monkeypatch.setattr(eng, "generate", spy)
+    sched = BatchScheduler(eng, max_batch=4, bucket_len=SEQ)
+    r1 = sched.submit(SEQ, prefix=np.array([1, 2], np.int32))
+    r2 = sched.submit(SEQ, prefix=np.array([3, 4, 5, 6, 7], np.int32))
+    r3 = sched.submit(SEQ, prefix=np.array([8], np.int32))
+    done = sched.run()
+    assert sorted(done) == [r1, r2, r3]
+    pre = np.asarray(seen["cond"]["prefix_tokens"])
+    m = eng.noise.mask_id
+    assert pre.shape == (4, 5)          # 3 requests -> bucket of 4, P=5
+    np.testing.assert_array_equal(pre[0], [m, m, m, 1, 2])
+    np.testing.assert_array_equal(pre[1], [3, 4, 5, 6, 7])
+    np.testing.assert_array_equal(pre[2], [m, m, m, m, 8])
+    np.testing.assert_array_equal(pre[3], [m] * 5)  # padded bucket row
+
+
 def test_mixed_method_queue_buckets_fifo(tiny):
     """The one-pass ``_buckets`` grouping: methods keep first-arrival
     order, FIFO within each method, chunks capped at max_batch — same

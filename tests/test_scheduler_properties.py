@@ -11,14 +11,17 @@ Random arrival orders, lengths, methods, and pump interleavings into
     per-step key stream, replayed outside the rolling batch);
   * the step-accounting invariant ``steps_executed + steps_skipped == T``
     (the skipped no-op steps are exactly the grid steps absent from the
-    request's predetermined schedule).
+    request's predetermined schedule; continuous-time methods have no
+    grid, so they execute all N timestamps and skip nothing).
 
 The denoiser is a *purely elementwise* fake (each row's logits depend
 only on that row), so trajectories are batch-shape-invariant and the
 parity assertion is exact — a real transformer mixes rows only through
 XLA reduction scheduling (~1e-6 logit jitter), which is why the
 real-model bitwise checks in tests/test_scheduler.py stick to the
-argmax-decode dndm/dndm2 while this file covers dndm_topk too.
+argmax-decode dndm/dndm2 while this file samples across every stepwise
+family (see METHODS; the exhaustive one-shot sweep is
+tests/test_scheduler.py::test_stepwise_full_registry_solo_parity).
 """
 import jax
 import jax.numpy as jnp
@@ -31,7 +34,11 @@ from hypothesis import given, settings, strategies as st
 from repro.serving import ContinuousScheduler, EngineConfig, GenerationEngine
 
 VOCAB, SEQ, STEPS, ROWS = 10, 8, 6, 3
-METHODS = ("dndm", "dndm2", "dndm_topk")
+# one per stepwise family: host DNDM (Alg 1/3/4), static grid, ancestral
+# baselines (d3pm / rdm-k / mask-predict) and continuous time (Alg 2)
+METHODS = ("dndm", "dndm2", "dndm_topk", "dndm_static", "d3pm", "rdm_k",
+           "mask_predict", "dndm_c")
+CONTINUOUS = ("dndm_c", "dndm_c_topk")
 
 
 class _FakeCfg:
@@ -96,9 +103,13 @@ def test_continuous_scheduler_invariants(engine, requests, seed):
         assert (0 <= toks).all() and (toks < VOCAB).all()
 
         # step accounting: the skipped no-op steps are exactly the grid
-        # steps the predetermined tau set proved unnecessary
+        # steps the predetermined tau set proved unnecessary (continuous
+        # time has no grid — the N timestamps ARE the schedule)
         assert r.steps_executed == len(r.plan.times)
-        assert r.steps_executed + r.steps_skipped == STEPS
+        if method in CONTINUOUS:
+            assert (r.steps_executed, r.steps_skipped) == (SEQ, 0)
+        else:
+            assert r.steps_executed + r.steps_skipped == STEPS
         assert r.nfe == r.steps_executed
         total_executed += r.steps_executed
 
