@@ -1,0 +1,122 @@
+"""Live-observability drive: the Poisson serving benchmark with the
+HTTP exporter up, scraped mid-run, and the scrape validated.
+
+``python -m benchmarks.run --serving-live BENCH_obs_live.json`` (the CI
+``obs-live`` leg) does, in one process:
+
+1. start the :mod:`repro.obs.exporter` HTTP server
+   (``REPRO_METRICS_PORT`` or an ephemeral port);
+2. run :func:`benchmarks.serving.emit` on a background thread while the
+   main thread polls ``/metrics`` until a scrape shows serving traffic
+   (a ``scheduler_service_seconds`` quantile sample) — i.e. a *mid-run*
+   scrape, with schedulers actively recording, exercising the
+   lock-consistent snapshot path;
+3. round-trip the scrape through ``exporter.parse_prometheus_text`` and
+   save it next to the JSON artifact (``<out>.metrics.txt``);
+4. after the benchmark completes, scrape once more and check the final
+   ``scheduler.service_seconds`` p95 agrees with the sketch quantile in
+   the artifact's ``telemetry.metrics`` snapshot within the sketch's
+   documented relative error (alpha = 1%, plus the exporter's own
+   ``%g`` rendering) — the acceptance contract tying the live endpoint
+   to the offline artifact.
+
+The regression gate then runs separately in CI::
+
+    python -m repro.obs.regress benchmarks/baselines/cpu_seed.json \\
+        BENCH_obs_live.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+import urllib.request
+
+from repro import obs
+from repro.obs import exporter
+from repro.obs.sketch import quantile_of_snapshot
+
+SCRAPE_TIMEOUT_S = 600.0
+POLL_S = 0.05
+
+
+def _scrape(url: str) -> str:
+    with urllib.request.urlopen(url + "/metrics", timeout=10) as resp:
+        return resp.read().decode()
+
+
+def _has_serving_traffic(parsed: dict) -> bool:
+    return any(name == "scheduler_service_seconds"
+               and dict(labels).get("quantile")
+               for name, labels in parsed)
+
+
+def run_live(out_path: str, quick: bool = True) -> dict:
+    from benchmarks.serving import emit
+
+    obs.enable()
+    port = int(os.environ.get("REPRO_METRICS_PORT", "0") or 0)
+    srv = exporter.serve(port)
+    print(f"# exporter up at {srv.url}/metrics", flush=True)
+
+    result: dict = {}
+    errors: list[BaseException] = []
+
+    def _bench():
+        try:
+            result.update(emit(out_path, quick=quick))
+        except BaseException as e:   # noqa: BLE001 — re-raised below
+            errors.append(e)
+
+    bench = threading.Thread(target=_bench, name="serving-bench")
+    bench.start()
+
+    # poll until a scrape catches the run mid-flight
+    mid_text = None
+    deadline = time.time() + SCRAPE_TIMEOUT_S
+    while time.time() < deadline and bench.is_alive():
+        text = _scrape(srv.url)
+        if _has_serving_traffic(exporter.parse_prometheus_text(text)):
+            mid_text = text
+            break
+        time.sleep(POLL_S)
+    bench.join(timeout=SCRAPE_TIMEOUT_S)
+    if errors:
+        raise errors[0]
+    if mid_text is None:
+        raise RuntimeError("never caught a mid-run /metrics scrape with "
+                           "scheduler.service_seconds samples")
+    scrape_path = out_path + ".metrics.txt"
+    with open(scrape_path, "w") as f:
+        f.write(mid_text)
+    mid = exporter.parse_prometheus_text(mid_text)
+    print(f"# mid-run scrape: {len(mid)} samples -> {scrape_path}",
+          flush=True)
+
+    # final consistency: live p95 == artifact sketch p95 (rel error <=
+    # sketch alpha + the exporter's %g formatting, i.e. ~1%)
+    final = exporter.parse_prometheus_text(_scrape(srv.url))
+    with open(out_path) as f:
+        artifact = json.load(f)
+    hist = artifact["telemetry"]["metrics"]["scheduler.service_seconds"]
+    checked = 0
+    for s in hist["series"]:
+        labels = tuple(sorted([("mode", s["labels"]["mode"]),
+                               ("quantile", "0.95")]))
+        live = final[("scheduler_service_seconds", labels)]
+        art = quantile_of_snapshot(s["value"], 0.95)
+        rel = abs(live - art) / max(art, 1e-12)
+        if rel > 0.02:
+            raise RuntimeError(
+                f"live p95 {live} vs artifact sketch p95 {art} "
+                f"(mode={s['labels']['mode']}): rel err {rel:.4f} > 0.02")
+        checked += 1
+    print(f"# live/artifact p95 agreement checked on {checked} series",
+          flush=True)
+    return result
+
+
+if __name__ == "__main__":
+    import sys
+    run_live(sys.argv[1] if len(sys.argv) > 1 else "BENCH_obs_live.json")

@@ -59,6 +59,15 @@ def main() -> None:
         from benchmarks.baseline import emit
         emit(path, quick=QUICK)
         return
+    if "--serving-live" in argv:
+        # live-observability leg: the Poisson serving benchmark with the
+        # HTTP exporter up, /metrics scraped+validated mid-run, and the
+        # live p95 checked against the artifact sketch (obs_live.py);
+        # CI gates the artifact with `python -m repro.obs.regress`
+        path = _out_path(argv, "--serving-live")
+        from benchmarks.obs_live import run_live
+        run_live(path, quick=QUICK)
+        return
     if "--serving-registry" in argv:
         # full-registry serving leg: every registered method through the
         # drain and continuous schedulers (see benchmarks/serving.py)

@@ -36,6 +36,7 @@ import numpy as np
 
 from benchmarks import common
 from repro import obs
+from repro.obs import slo as slo_lib
 from repro.serving.scheduler import BatchScheduler, ContinuousScheduler
 
 MAX_BATCH = 8
@@ -55,7 +56,8 @@ def _workload(n: int, rate: float, seed: int = 0):
 def _percentiles(done) -> dict:
     lat = np.asarray([r.t_done - r.t_submit for r in done.values()])
     return {"latency_p50_s": round(float(np.percentile(lat, 50)), 6),
-            "latency_p95_s": round(float(np.percentile(lat, 95)), 6)}
+            "latency_p95_s": round(float(np.percentile(lat, 95)), 6),
+            "latency_p99_s": round(float(np.percentile(lat, 99)), 6)}
 
 
 def _drive(sched, arrivals, lengths, pump: bool, methods=None):
@@ -147,6 +149,17 @@ def emit(path: str, quick: bool = True) -> dict:
     rate = OCCUPANCY * MAX_BATCH / (e_nfe * per_call)
     arrivals, lengths = _workload(n_requests, rate)
 
+    # score the measured traffic against default serving budgets (unless
+    # REPRO_SLO already configured some): the full-drain service time
+    # bounds any sane request latency, and the per-request NFE can never
+    # exceed the step grid — breaches land in scheduler.slo_breaches and
+    # the burn summary below
+    if not slo_lib.active():
+        slo_lib.configure([
+            slo_lib.Budget("latency", round(e_nfe * per_call * 4, 3),
+                           objective=0.95),
+            slo_lib.Budget("nfe", steps, objective=1.0)])
+
     record: dict = {
         "schema": 2,
         "kind": "serving",
@@ -208,6 +221,7 @@ def emit(path: str, quick: bool = True) -> dict:
     record["telemetry"] = {
         "enabled": obs.enabled(),
         "trace": obs.tracing.sink_path(),
+        "slo": slo_lib.status(),
         "metrics": obs.snapshot(),
     }
     with open(path, "w") as f:
@@ -360,6 +374,7 @@ def emit_registry(path: str, quick: bool = True) -> dict:
     record["telemetry"] = {
         "enabled": obs.enabled(),
         "trace": obs.tracing.sink_path(),
+        "slo": slo_lib.status(),
         "metrics": obs.snapshot(),
     }
     with open(path, "w") as f:

@@ -35,9 +35,16 @@ def main():
     ap.add_argument("--layers", type=int, default=2)
     ap.add_argument("--metrics", action="store_true",
                     help="enable repro.obs telemetry and print a summary")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve live metrics while running: Prometheus "
+                         "text at /metrics, JSON at /snapshot (implies "
+                         "--metrics; 0 picks an ephemeral port)")
     args = ap.parse_args()
-    if args.metrics:
+    if args.metrics or args.metrics_port is not None:
         obs.enable()
+    if args.metrics_port is not None:
+        srv = obs.exporter.serve(args.metrics_port)
+        print(f"live metrics: {srv.url}/metrics  |  {srv.url}/snapshot")
 
     vocab = 28                                     # 27 chars + [MASK]
     cfg = ModelConfig(
@@ -74,9 +81,10 @@ def main():
         if method == "dndm":
             print(f"  sample: {tok.decode(np.asarray(out.tokens)[0])!r}")
 
-    if args.metrics:
-        # the telemetry roll-up: engine spans, per-step |R_t| histogram,
-        # jit-cache hit/miss counters, decode backend selection
+    if args.metrics or args.metrics_port is not None:
+        # the telemetry roll-up: engine spans, per-step |R_t| histogram
+        # with sketch-backed p50/p95/p99, jit-cache hit/miss counters,
+        # decode backend selection
         print("\n== telemetry ==")
         print(obs.summary())
 

@@ -70,6 +70,13 @@ class CallSchedule:
     continuous-time schedules, where the grid is the request itself).
     ``tau`` is None for the schedule-driven baselines (their update rule
     never consults a transition-time set).
+
+    ``request_id`` is the serving-layer trace identity: the scheduler
+    stamps the id minted at ``submit()`` onto the plan
+    (``dataclasses.replace``), and every batched ``engine.stepwise``
+    span lists the ids of the rows it advanced — which is what makes a
+    request's full call timeline reconstructable from one trace file
+    (``obs.timeline``).  ``schedule_fn`` implementations leave it None.
     """
 
     times: np.ndarray                    # descending call times
@@ -77,6 +84,7 @@ class CallSchedule:
     tau: np.ndarray | None = None        # (N,) per-token transition times
     x0: np.ndarray | None = None         # (N,) the request's x_T draw
     step_keys: np.ndarray | None = None  # (len(times), 2) per-call keys
+    request_id: str | None = None        # trace identity (scheduler-set)
 
     @property
     def nfe(self) -> int:

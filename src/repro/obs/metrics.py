@@ -27,7 +27,10 @@ as such in ARCHITECTURE.md.
 from __future__ import annotations
 
 import contextlib
+import copy
 import threading
+
+from repro.obs.sketch import DDSketch
 
 _ENABLED = False
 _SUPPRESSED = 0
@@ -92,7 +95,8 @@ class Counter(_Instrument):
         if not _ENABLED or _SUPPRESSED:
             return
         k = _labels_key(labels)
-        self.series[k] = self.series.get(k, 0) + value
+        with _lock:
+            self.series[k] = self.series.get(k, 0) + value
 
     def value(self, **labels):
         return self.series.get(_labels_key(labels), 0)
@@ -104,7 +108,8 @@ class Gauge(_Instrument):
     def set(self, value, **labels) -> None:
         if not _ENABLED or _SUPPRESSED:
             return
-        self.series[_labels_key(labels)] = value
+        with _lock:
+            self.series[_labels_key(labels)] = value
 
     def value(self, **labels):
         return self.series.get(_labels_key(labels))
@@ -113,31 +118,48 @@ class Gauge(_Instrument):
 # decade buckets: 100ns .. 100s covers step timings and reveal counts
 _BUCKET_EDGES = tuple(10.0 ** e for e in range(-7, 3))
 
+# pre-computed quantiles every histogram snapshot carries; arbitrary
+# quantiles stay available via the serialized sketch
+# (repro.obs.sketch.quantile_of_snapshot)
+QUANTILES = (0.5, 0.95, 0.99)
+
 
 class Histogram(_Instrument):
+    """Decade-bucket histogram + DDSketch per series.
+
+    Every series carries a fixed-memory relative-error quantile sketch
+    (``sketch.DDSketch``, alpha = 1%) next to the coarse decade buckets,
+    so p50/p95/p99 are first-class in snapshots, ``summary()`` and the
+    Prometheus exporter — with documented ≤ 1% relative error instead of
+    "somewhere in this decade".
+    """
+
     kind = "histogram"
 
     def observe(self, value: float, **labels) -> None:
         if not _ENABLED or _SUPPRESSED:
             return
         k = _labels_key(labels)
-        s = self.series.get(k)
-        if s is None:
-            s = self.series[k] = {
-                "count": 0, "sum": 0.0, "min": value, "max": value,
-                "buckets": [0] * (len(_BUCKET_EDGES) + 1)}
-        s["count"] += 1
-        s["sum"] += value
-        if value < s["min"]:
-            s["min"] = value
-        if value > s["max"]:
-            s["max"] = value
-        i = 0
-        for edge in _BUCKET_EDGES:
-            if value <= edge:
-                break
-            i += 1
-        s["buckets"][i] += 1
+        with _lock:
+            s = self.series.get(k)
+            if s is None:
+                s = self.series[k] = {
+                    "count": 0, "sum": 0.0, "min": value, "max": value,
+                    "buckets": [0] * (len(_BUCKET_EDGES) + 1),
+                    "sketch": DDSketch()}
+            s["count"] += 1
+            s["sum"] += value
+            if value < s["min"]:
+                s["min"] = value
+            if value > s["max"]:
+                s["max"] = value
+            i = 0
+            for edge in _BUCKET_EDGES:
+                if value <= edge:
+                    break
+                i += 1
+            s["buckets"][i] += 1
+            s["sketch"].add(value)
 
     def value(self, **labels):
         return self.series.get(_labels_key(labels))
@@ -149,13 +171,17 @@ class Histogram(_Instrument):
                 le = (f"{_BUCKET_EDGES[i]:g}" if i < len(_BUCKET_EDGES)
                       else "inf")
                 buckets[f"le_{le}"] = c
-        return {"count": s["count"], "sum": s["sum"], "min": s["min"],
-                "max": s["max"],
-                "mean": s["sum"] / s["count"] if s["count"] else 0.0,
-                "buckets": buckets}
+        sk: DDSketch = s["sketch"]
+        out = {"count": s["count"], "sum": s["sum"], "min": s["min"],
+               "max": s["max"],
+               "mean": s["sum"] / s["count"] if s["count"] else 0.0,
+               "buckets": buckets, "sketch": sk.to_dict()}
+        for q in QUANTILES:
+            out[f"p{int(q * 100)}"] = sk.quantile(q)
+        return out
 
 
-_lock = threading.Lock()
+_lock = threading.RLock()
 _REGISTRY: dict[str, _Instrument] = {}
 
 
@@ -183,12 +209,24 @@ def histogram(name: str, help: str = "") -> Histogram:
 
 
 def snapshot() -> dict:
-    """JSON-able view of every instrument with at least one series."""
-    return {name: inst.snapshot()
-            for name, inst in sorted(_REGISTRY.items()) if inst.series}
+    """JSON-able view of every instrument with at least one series.
+
+    Taken under the registry lock that every record call also holds, so
+    a concurrent reader (the ``/metrics`` exporter thread, the snapshot
+    writer) never observes a torn series — e.g. a histogram whose
+    ``count`` was bumped but whose ``sum``/sketch were not yet.  The
+    returned structure is freshly built (histogram buckets and sketches
+    are serialized copies), so callers can hold it across further
+    recording without aliasing live state.
+    """
+    with _lock:
+        return copy.deepcopy({name: inst.snapshot()
+                              for name, inst in sorted(_REGISTRY.items())
+                              if inst.series})
 
 
 def reset() -> None:
     """Clear recorded values; registered instruments survive."""
-    for inst in _REGISTRY.values():
-        inst.series.clear()
+    with _lock:
+        for inst in _REGISTRY.values():
+            inst.series.clear()

@@ -27,7 +27,8 @@ version 2, tagged ``"kind": "serving"``)::
      "modes": {"drain":      {"wall_seconds": float, "aggregate_nfe": int,
                               "throughput_rps": float,
                               "latency_p50_s": float,
-                              "latency_p95_s": float},
+                              "latency_p95_s": float,
+                              "latency_p99_s": float},
                "continuous": {... same keys ..., "steps_skipped": int,
                               "admissions_midflight": int}},
      "comparison": {"nfe_ratio": float, "throughput_ratio": float,
@@ -97,9 +98,21 @@ def validate_metrics_snapshot(snap: dict, path: str = "metrics") -> None:
         _typed(inst, p, "help", str)
         series = _typed(inst, p, "series", list)
         for i, s in enumerate(series):
+            sp = f"{p}.series[{i}]"
             _check(isinstance(s, dict), p, f"series[{i}] must be an object")
-            _typed(s, f"{p}.series[{i}]", "labels", dict)
-            _check("value" in s, f"{p}.series[{i}]", "missing 'value'")
+            _typed(s, sp, "labels", dict)
+            _check("value" in s, sp, "missing 'value'")
+            if inst["type"] == "histogram":
+                # quantiles are first-class: every histogram series
+                # carries sketch-backed p50/p95/p99 plus the serialized
+                # sketch itself (repro.obs.sketch) for arbitrary q
+                v = _typed(s, sp, "value", dict)
+                for q in ("p50", "p95", "p99"):
+                    _number(v, f"{sp}.value", q, minimum=0.0)
+                sk = _typed(v, f"{sp}.value", "sketch", dict)
+                _number(sk, f"{sp}.value.sketch", "alpha", minimum=0.0)
+                _number(sk, f"{sp}.value.sketch", "count", minimum=0)
+                _typed(sk, f"{sp}.value.sketch", "bins", dict)
 
 
 def validate_bench(record: dict) -> None:
@@ -138,7 +151,7 @@ def validate_bench(record: dict) -> None:
 
 
 _MODE_KEYS = ("wall_seconds", "throughput_rps", "latency_p50_s",
-              "latency_p95_s")
+              "latency_p95_s", "latency_p99_s")
 
 
 def validate_serving(record: dict) -> None:

@@ -21,6 +21,7 @@ the same no-op singleton.
 """
 from __future__ import annotations
 
+import atexit
 import itertools
 import json
 import os
@@ -29,13 +30,30 @@ import time
 
 from repro.obs import metrics as _metrics
 
+# In-memory record bound: _emit keeps the first _MAX_RECORDS records and
+# counts (never silently swallows) everything after — the drop total is
+# the obs.trace.dropped_records counter, shows up in summary() and in
+# the metrics footer record close_sink(final_metrics=True) appends.  A
+# sink keeps receiving every record regardless: only the in-memory
+# buffer is bounded.
 _MAX_RECORDS = 200_000
+
+# sink buffering: one write+flush per record made tracing the hot path's
+# dominant syscall cost; records now accumulate and hit the file every
+# _SINK_FLUSH_RECORDS records or _SINK_FLUSH_SECONDS since the last
+# flush, plus always on flush_sink()/close_sink()/set_sink()
+_SINK_FLUSH_RECORDS = 256
+_SINK_FLUSH_SECONDS = 1.0
 
 _tls = threading.local()
 _next_id = itertools.count(1).__next__
 _records: list[dict] = []
+_dropped = 0
 _sink = None
 _sink_path: str | None = None
+_sink_buf: list[str] = []
+_sink_last_flush = 0.0
+_sink_lock = threading.Lock()
 
 
 def _stack() -> list:
@@ -58,11 +76,42 @@ def _coerce(v):
 
 
 def _emit(rec: dict) -> None:
+    global _dropped
     if len(_records) < _MAX_RECORDS:
         _records.append(rec)
+    else:
+        _dropped += 1
+        _metrics.counter(
+            "obs.trace.dropped_records",
+            "trace records past the in-memory bound (_MAX_RECORDS); "
+            "the file sink still received them").inc()
     if _sink is not None:
-        _sink.write(json.dumps(rec) + "\n")
+        with _sink_lock:
+            _sink_buf.append(json.dumps(rec) + "\n")
+            if (len(_sink_buf) >= _SINK_FLUSH_RECORDS
+                    or time.time() - _sink_last_flush
+                    >= _SINK_FLUSH_SECONDS):
+                _flush_locked()
+
+
+def _flush_locked() -> None:
+    global _sink_last_flush
+    if _sink is not None and _sink_buf:
+        _sink.write("".join(_sink_buf))
         _sink.flush()
+    _sink_buf.clear()
+    _sink_last_flush = time.time()
+
+
+def flush_sink() -> None:
+    """Force buffered records to the sink file (tests, live tailing)."""
+    with _sink_lock:
+        _flush_locked()
+
+
+def dropped_records() -> int:
+    """Records discarded from the in-memory buffer (sink unaffected)."""
+    return _dropped
 
 
 class _NullSpan:
@@ -134,9 +183,19 @@ def event(name: str, **attrs) -> None:
 
 
 def write_metrics_record() -> None:
-    """Append the current metrics snapshot as one trace record."""
+    """Append the current metrics snapshot as one trace record.
+
+    The footer record a trace file ends with (``close_sink(
+    final_metrics=True)``): alongside every live metric it carries
+    ``obs.trace.dropped_records`` whenever the in-memory buffer
+    overflowed, so a truncated ``records()`` view is always detectable
+    from the file alone.
+    """
     if not _metrics.enabled():
         return
+    if _dropped:        # counter may predate enable(); pin the total
+        _metrics.gauge("obs.trace.dropped_records_total",
+                       "final in-memory drop total").set(_dropped)
     _emit({"kind": "metrics", "ts": time.time(), "span_id": _next_id(),
            "parent_id": None, "attrs": {},
            "metrics": _metrics.snapshot()})
@@ -144,10 +203,12 @@ def write_metrics_record() -> None:
 
 def set_sink(path: str) -> None:
     """Open (append) a JSON-lines sink; closes any previous sink."""
-    global _sink, _sink_path
+    global _sink, _sink_path, _sink_last_flush
     close_sink()
-    _sink = open(path, "a")
-    _sink_path = path
+    with _sink_lock:
+        _sink = open(path, "a")
+        _sink_path = path
+        _sink_last_flush = time.time()
 
 
 def close_sink(final_metrics: bool = False) -> None:
@@ -156,13 +217,20 @@ def close_sink(final_metrics: bool = False) -> None:
         return
     if final_metrics:
         write_metrics_record()
-    _sink.close()
-    _sink = None
-    _sink_path = None
+    with _sink_lock:
+        _flush_locked()
+        _sink.close()
+        _sink = None
+        _sink_path = None
 
 
 def sink_path() -> str | None:
     return _sink_path
+
+
+# The sink is write-buffered (_SINK_FLUSH_RECORDS); a process that sets
+# REPRO_TRACE and exits without close_sink() must not lose the tail.
+atexit.register(close_sink)
 
 
 def records() -> list[dict]:
@@ -170,7 +238,9 @@ def records() -> list[dict]:
 
 
 def clear() -> None:
+    global _dropped
     _records.clear()
+    _dropped = 0
     _tls.stack = []
 
 
@@ -187,6 +257,11 @@ def summary() -> str:
         d = agg[name]
         lines.append(f"{name:<28} {len(d):>6} {sum(d):>9.4f} "
                      f"{sum(d) / len(d):>9.4f} {max(d):>9.4f}")
+    if _dropped:
+        lines.append(f"!! {_dropped} trace records dropped from the "
+                     f"in-memory buffer (bound {_MAX_RECORDS}); the span "
+                     "table above is a truncated view (file sink, if "
+                     "set, is complete)")
     lines.append("== metrics ==")
     for name, inst in sorted(_metrics.snapshot().items()):
         for s in inst["series"]:
@@ -194,9 +269,66 @@ def summary() -> str:
             v = s["value"]
             if isinstance(v, dict):                     # histogram stats
                 v = (f"count={v['count']} mean={v['mean']:.4g} "
-                     f"min={v['min']:.4g} max={v['max']:.4g}")
+                     f"min={v['min']:.4g} max={v['max']:.4g} "
+                     f"p50={v['p50']:.4g} p95={v['p95']:.4g} "
+                     f"p99={v['p99']:.4g}")
             lines.append(f"{name}{{{labels}}} {v}")
     return "\n".join(lines)
+
+
+# ------------------------------------------------------------------
+# per-request timelines
+# ------------------------------------------------------------------
+
+def _matches(rec: dict, request_id: str) -> bool:
+    a = rec.get("attrs", {})
+    if a.get("request_id") == request_id:
+        return True
+    ids = a.get("request_ids")
+    return bool(ids) and request_id in str(ids).split(",")
+
+
+def timeline(request_id: str, path: str | None = None) -> list[dict]:
+    """One request's full lifecycle, reconstructed from the trace.
+
+    Returns every record that names ``request_id`` — directly via an
+    ``attrs.request_id`` / ``attrs.request_ids`` entry (submit /
+    admission / completion events, the batched ``engine.stepwise`` and
+    ``scheduler.batch`` spans the request rode) — plus every record
+    nested (transitively) under one of those spans, e.g. the
+    ``engine.generate`` span and its ``sampler.step`` events inside a
+    drain batch.  Sorted by timestamp: submit → admission → each
+    batched network call → completion.
+
+    Reads the in-memory buffer by default; pass ``path`` to reconstruct
+    from a trace *file* instead (works in a fresh process, which is the
+    point of the JSONL export).  Note spans are emitted at exit, so a
+    span's file position is later than its children's — ``ts`` (span
+    start time) is the sort key that restores causal order.
+    """
+    if path is not None:
+        with open(path) as f:
+            recs = [json.loads(line) for line in f if line.strip()]
+    else:
+        flush_sink()
+        recs = list(_records)
+    direct = [r for r in recs if _matches(r, request_id)]
+    want = {r["span_id"] for r in direct}
+    parents = {r["span_id"]: r.get("parent_id") for r in recs}
+    out = list(direct)
+    for r in recs:
+        if r["span_id"] in want:
+            continue
+        pid = r.get("parent_id")
+        seen = set()
+        while pid is not None and pid not in seen:
+            if pid in want:
+                out.append(r)
+                want.add(r["span_id"])
+                break
+            seen.add(pid)
+            pid = parents.get(pid)
+    return sorted(out, key=lambda r: (r["ts"], r["span_id"]))
 
 
 class _Profile:

@@ -346,7 +346,13 @@ class StepwiseRunner:
             self._ptr[row] = 0
 
     def step(self) -> dict[int, np.ndarray]:
-        """One batched network call; returns tokens of rows that finished."""
+        """One batched network call; returns tokens of rows that finished.
+
+        With telemetry on, every call is an ``engine.stepwise`` span
+        whose ``request_ids`` attribute lists the trace identity of each
+        row the call advanced (comma-joined) — the per-call backbone of
+        ``obs.timeline(request_id)``.
+        """
         active = self.active_rows()
         if not active:
             return {}
@@ -358,10 +364,17 @@ class StepwiseRunner:
             keys[i] = plan.step_keys[self._ptr[i]]
         cond = (None if self.prefix is None
                 else {"prefix_tokens": self.prefix})
-        state = self.spec.stepwise_step(
-            {"x": self.x, "revealed": self.revealed},
-            self.tau, jnp.asarray(t_row), jnp.asarray(keys), cond, self.rt)
-        self.x, self.revealed = state["x"], state["revealed"]
+        rids = (",".join(p.request_id for i in active
+                         if (p := self._plans[i]).request_id is not None)
+                if obs.enabled() else "")
+        with obs.span("engine.stepwise", method=self.method,
+                      call=self.calls, rows=len(active),
+                      request_ids=rids):
+            state = self.spec.stepwise_step(
+                {"x": self.x, "revealed": self.revealed},
+                self.tau, jnp.asarray(t_row), jnp.asarray(keys), cond,
+                self.rt)
+            self.x, self.revealed = state["x"], state["revealed"]
         self.calls += 1
         if obs.enabled():
             obs.counter("engine.stepwise_calls").inc(method=self.method)

@@ -25,6 +25,7 @@ hits one compiled sampler.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 
 import jax
@@ -32,7 +33,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.obs import slo as slo_lib
 from repro.serving.engine import GenerationEngine, StepwiseRunner
+
+# process-wide request-id mint: ids stay unique across scheduler
+# instances so one trace file can hold several schedulers' requests
+_next_request_id = itertools.count(1).__next__
+
+
+def mint_request_id() -> str:
+    return f"req-{_next_request_id():06d}"
 
 
 @dataclasses.dataclass
@@ -58,6 +68,10 @@ class Request:
     plan: object | None = None
     steps_executed: int = 0
     steps_skipped: int = 0
+    # trace identity, minted at submit(): every span/event this request
+    # touches carries it, so obs.timeline(request_id) reconstructs the
+    # full submit -> admission -> per-call -> completion history
+    request_id: str = ""
 
 
 class BatchScheduler:
@@ -83,7 +97,11 @@ class BatchScheduler:
         self.engine.check_method(method)
         self._rid += 1
         req = Request(self._rid, length, prefix, method)
+        req.request_id = mint_request_id()
         req.t_submit = time.time()
+        if obs.enabled():
+            obs.event("scheduler.submit", request_id=req.request_id,
+                      method=method, length=length, mode="drain")
         self.queue.append(req)
         return self._rid
 
@@ -145,8 +163,15 @@ class BatchScheduler:
                 cond = {"prefix_tokens": jnp.asarray(pre)}
             self._key, k = jax.random.split(self._key)
             t_admit = time.time()
+            rids = ",".join(r.request_id for r in batch)
             with obs.span("scheduler.batch", method=m, requests=len(batch),
-                          bucket=B) as sp:
+                          bucket=B, request_ids=rids) as sp:
+                if obs.enabled():
+                    for r in batch:
+                        obs.event("scheduler.admit",
+                                  request_id=r.request_id, method=m,
+                                  mode="drain",
+                                  queue_s=t_admit - r.t_submit)
                 out, wall = self.engine.generate(k, B, N, cond=cond,
                                                  method=m)
                 if obs.enabled():
@@ -177,6 +202,13 @@ class BatchScheduler:
                         t_admit - r.t_submit, mode="drain")
                     obs.histogram("scheduler.service_seconds").observe(
                         t_done - t_admit, mode="drain")
+                    obs.event("scheduler.complete",
+                              request_id=r.request_id, method=r.method,
+                              mode="drain", nfe=r.nfe,
+                              service_s=t_done - t_admit)
+                    slo_lib.observe_request(
+                        r.method, latency_s=t_done - t_admit,
+                        queue_s=t_admit - r.t_submit, nfe=r.nfe)
                 self.done[r.rid] = r
         return self.done
 
@@ -246,9 +278,18 @@ class ContinuousScheduler:
         if prefix is not None:
             prefix = np.asarray(prefix, np.int32).reshape(-1)
         r = Request(self._rid, length, prefix, method)
+        r.request_id = mint_request_id()
         r.key = jax.random.fold_in(self._key, self._rid)
-        r.plan = self.engine.plan_request(r.key, self.bucket_len, method)
+        # stamp the trace identity onto the plan: the StepwiseRunner
+        # reads it back to label every batched call this request rides
+        r.plan = dataclasses.replace(
+            self.engine.plan_request(r.key, self.bucket_len, method),
+            request_id=r.request_id)
         r.t_submit = time.time()
+        if obs.enabled():
+            obs.event("scheduler.submit", request_id=r.request_id,
+                      method=method, length=length, mode="continuous",
+                      planned_nfe=r.plan.nfe)
         self.queue.append(r)
         return self._rid
 
@@ -290,6 +331,10 @@ class ContinuousScheduler:
             if obs.enabled():
                 obs.histogram("scheduler.queue_latency_seconds").observe(
                     r.t_admit - r.t_submit, mode="continuous")
+                obs.event("scheduler.admit", request_id=r.request_id,
+                          method=r.method, mode="continuous", row=row,
+                          midflight=midflight,
+                          queue_s=r.t_admit - r.t_submit)
                 if midflight:
                     obs.counter("scheduler.admissions_midflight").inc(
                         method=r.method)
@@ -328,30 +373,42 @@ class ContinuousScheduler:
         group = self._next_group()
         if group is None:
             return False
-        self._admit(group)
-        runner = self._runner(group)
-        if obs.enabled():
-            obs.gauge("scheduler.queue_depth").set(len(self.queue))
-            obs.histogram("scheduler.occupancy").observe(
-                len(runner.active_rows()) / runner.rows,
-                method=group[0])
-        finished = runner.step()
-        self.total_calls += 1
-        t_done = time.time()
-        for row, toks in finished.items():
-            r = self._row_req.pop((group, row))
-            r.result = toks[: r.length]
-            r.nfe = r.plan.nfe
-            r.steps_executed = r.plan.steps_executed
-            r.steps_skipped = r.plan.steps_skipped
-            r.t_done = t_done
+        with obs.span("scheduler.pump", method=group[0],
+                      prefix_len=group[1]) as sp:
+            self._admit(group)
+            runner = self._runner(group)
             if obs.enabled():
-                obs.counter("scheduler.steps_skipped").inc(
-                    r.steps_skipped, method=r.method)
-                obs.counter("scheduler.requests").inc(method=r.method)
-                obs.histogram("scheduler.service_seconds").observe(
-                    t_done - r.t_admit, mode="continuous")
-            self.done[r.rid] = r
+                obs.gauge("scheduler.queue_depth").set(len(self.queue))
+                obs.histogram("scheduler.occupancy").observe(
+                    len(runner.active_rows()) / runner.rows,
+                    method=group[0])
+                sp.set(queue_depth=len(self.queue),
+                       live_rows=len(runner.active_rows()))
+            finished = runner.step()
+            self.total_calls += 1
+            t_done = time.time()
+            for row, toks in finished.items():
+                r = self._row_req.pop((group, row))
+                r.result = toks[: r.length]
+                r.nfe = r.plan.nfe
+                r.steps_executed = r.plan.steps_executed
+                r.steps_skipped = r.plan.steps_skipped
+                r.t_done = t_done
+                if obs.enabled():
+                    obs.counter("scheduler.steps_skipped").inc(
+                        r.steps_skipped, method=r.method)
+                    obs.counter("scheduler.requests").inc(method=r.method)
+                    obs.histogram("scheduler.service_seconds").observe(
+                        t_done - r.t_admit, mode="continuous")
+                    obs.event("scheduler.complete",
+                              request_id=r.request_id, method=r.method,
+                              mode="continuous", nfe=r.nfe,
+                              steps_skipped=r.steps_skipped,
+                              service_s=t_done - r.t_admit)
+                    slo_lib.observe_request(
+                        r.method, latency_s=t_done - r.t_admit,
+                        queue_s=r.t_admit - r.t_submit, nfe=r.nfe)
+                self.done[r.rid] = r
         return bool(self.queue or self._row_req)
 
     def run(self) -> dict[int, Request]:

@@ -130,3 +130,67 @@ def test_bleu_sanity():
     # geometric mean over 4-grams stays near zero
     c = a[:, ::-1]
     assert bleu(b, a) < bleu(c, a) < 99.0
+
+
+# ------------------------------------------------------------------
+# ISSUE 10: DDSketch quantile sketch (repro.obs.sketch)
+# ------------------------------------------------------------------
+from repro.obs.sketch import DDSketch
+
+_positive = st.floats(min_value=1e-6, max_value=1e9,
+                      allow_nan=False, allow_infinity=False)
+
+
+@given(vals=st.lists(_positive, min_size=1, max_size=400),
+       q=st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_sketch_quantile_relative_error_bound(vals, q):
+    """The DDSketch guarantee: quantile(q) is within alpha relative
+    error of the true value at rank floor(q * (n - 1)) — the nearest-
+    rank convention the sketch documents — for any value stream."""
+    sk = DDSketch(alpha=0.01)
+    for v in vals:
+        sk.add(v)
+    true = sorted(vals)[int(q * (len(vals) - 1))]
+    assert abs(sk.quantile(q) - true) <= 0.01 * true * (1 + 1e-9)
+
+
+@given(a=st.lists(_positive, max_size=100),
+       b=st.lists(_positive, max_size=100),
+       c=st.lists(_positive, max_size=100))
+@settings(max_examples=40, deadline=None)
+def test_sketch_merge_associative_commutative_exact(a, b, c):
+    """merge is exact bucket addition: (A+B)+C == A+(B+C) == one global
+    sketch over the concatenated stream, bins and zero/count state all
+    equal — per-shard sketches lose nothing vs a single registry."""
+    def mk(vals):
+        s = DDSketch(alpha=0.01)
+        for v in vals:
+            s.add(v)
+        return s
+
+    left = mk(a).merge(mk(b)).merge(mk(c))           # (A+B)+C
+    right = mk(a).merge(mk(b).merge(mk(c)))          # A+(B+C)
+    flat = mk(a + b + c)                             # global
+    swap = mk(c).merge(mk(a)).merge(mk(b))           # commuted
+    for other in (right, flat, swap):
+        assert left.bins == other.bins
+        assert left.zeros == other.zeros
+        assert left.count == other.count
+    if flat.count:
+        assert left.quantile(0.95) == flat.quantile(0.95)
+
+
+@given(vals=st.lists(_positive, min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_sketch_serialization_round_trip(vals):
+    """to_dict/from_dict through actual JSON is lossless: every quantile
+    answer survives — artifact readers see the live sketch."""
+    import json as _json
+    sk = DDSketch(alpha=0.01)
+    for v in vals:
+        sk.add(v)
+    back = DDSketch.from_dict(_json.loads(_json.dumps(sk.to_dict())))
+    assert back.bins == sk.bins and back.count == sk.count
+    for q in (0.0, 0.5, 0.95, 0.99, 1.0):
+        assert back.quantile(q) == sk.quantile(q)
